@@ -1,0 +1,59 @@
+"""Paper Tables 6/7: server-side aggregation duration vs number of client
+models, FedAvg (associative — rides partial aggregation) vs FedMedian
+(non-associative — must gather everything).
+
+Measured on the real jitted aggregation code with model-sized pytrees
+(scaled-down byte sizes, same scaling law), plus the paper-calibrated
+absolute model for the full sizes.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import fedavg_flat, fedmedian, fold_clients
+from repro.simcluster.engine import agg_time
+from repro.simcluster.profiles import (AGG_RATE_FEDAVG, AGG_RATE_FEDMEDIAN,
+                                       TASKS)
+
+
+def _models(n, kb, seed=0):
+    k = jax.random.key(seed)
+    size = kb * 256  # f32 elements
+    return [{"w": jax.random.normal(jax.random.fold_in(k, i), (size,))}
+            for i in range(n)]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[str]:
+    rows = ["bench_aggregation,strategy,n_models,measured_ms,"
+            "paper_model_s_ic"]
+    fedavg_j = jax.jit(lambda ts, w: fedavg_flat(ts, w))
+    for n in (4, 16, 64):
+        models = _models(n, kb=64)
+        w = jnp.ones(n)
+        t_avg = _time(lambda: fedavg_j(models, w))
+        t_med = _time(lambda: fedmedian(models))
+        rows.append(f"bench_aggregation,fedavg,{n},{t_avg * 1e3:.2f},"
+                    f"{agg_time(n * 15, TASKS['ic'].model_bytes):.2f}")
+        rows.append(f"bench_aggregation,fedmedian,{n},{t_med * 1e3:.2f},"
+                    f"{agg_time(n * 15, TASKS['ic'].model_bytes, AGG_RATE_FEDMEDIAN):.2f}")
+    # partial aggregation: server cost constant in cohort (A.3)
+    like = _models(1, kb=64)[0]
+    for n in (8, 64):
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *_models(n, kb=64))
+        t_fold = _time(lambda: fold_clients(like, stacked, jnp.ones(n)))
+        rows.append(f"bench_aggregation,partial_fold,{n},{t_fold * 1e3:.2f},"
+                    f"{agg_time(2, TASKS['ic'].model_bytes):.2f}")
+    # scaling-law asserts: linear in n for full strategies
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Figs. 8/9 (+Fig. 1): medium-scale framework comparison on the
+single-node (1×A40) and multi-node (A40 + 3×2080 Ti) clusters; 100 clients
+per round, extrapolated to 5000 rounds (paper A.1 protocol)."""
+
+import numpy as np
+
+from repro.data import make_federated_dataset
+from repro.simcluster import TASKS, multi_node, run_experiment, single_node
+
+FRAMEWORKS = ("pollen", "flower", "fedscale", "flute", "parrot")
+
+
+def run(*, cohort: int = 100, rounds: int = 8) -> list[str]:
+    rows = ["bench_frameworks,setting,task,framework,round_s,total_5000r_d"]
+    for setting, cluster in (("single", single_node()),
+                             ("multi", multi_node())):
+        for task in ("tg", "ic", "sr", "mlm"):
+            ds = make_federated_dataset(task)
+            totals = {}
+            for fw in FRAMEWORKS:
+                rng = np.random.default_rng(11)
+                sampler = lambda r: [ds.n_batches(int(c)) for c in
+                                     rng.choice(ds.n_clients, size=cohort)]
+                res = run_experiment(fw, TASKS[task], cluster, sampler,
+                                     rounds=rounds)
+                totals[fw] = res.total_time
+                rows.append(f"bench_frameworks,{setting},{task},{fw},"
+                            f"{res.mean_round_time:.1f},"
+                            f"{res.total_time / 86400:.2f}")
+            # §6.2: in the heterogeneous multi-node setting Pollen leads all
+            if setting == "multi":
+                assert totals["pollen"] == min(totals.values()), task
+    return rows

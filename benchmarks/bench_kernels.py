@@ -1,0 +1,84 @@
+"""Kernel-layer benchmark: correctness deltas + HBM-traffic accounting for
+the Pallas kernels vs their XLA counterparts.
+
+Wall-clock on CPU is meaningless for TPU kernels (interpret mode executes
+the kernel body in Python), so this benchmark reports the *structural* win:
+bytes that must cross HBM per call for the fused kernel vs the unfused XLA
+lowering — the quantity the §Perf memory term is made of — plus a
+correctness check per shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _traffic_fedavg(n_elems, dtype_bytes):
+    fused = 3 * n_elems * dtype_bytes            # read acc, theta; write out
+    unfused = 5 * n_elems * dtype_bytes          # + intermediate mul/div trips
+    return fused, unfused
+
+
+def _traffic_attention(b, s, hq, hkv, d, dtype_bytes):
+    io = (b * s * hq * d + 2 * b * s * hkv * d + b * s * hq * d) * dtype_bytes
+    fused = io                                    # probs never leave VMEM
+    unfused = io + 2 * b * hq * s * s * 4         # scores + probs in f32
+    return fused, unfused
+
+
+def run() -> list[str]:
+    rows = ["bench_kernels,kernel,shape,max_err,fused_MB,unfused_MB,saving"]
+    k = jax.random.key(0)
+    # fedavg_accum
+    for n in (1 << 16, 1 << 20):
+        a = jax.random.normal(k, (n,), jnp.bfloat16)
+        t = jax.random.normal(jax.random.fold_in(k, 1), (n,), jnp.bfloat16)
+        err = float(jnp.abs(
+            ops.fedavg_accum(a, t, 5.0, 2.0).astype(jnp.float32)
+            - ref.fedavg_accum_ref(a, t, 5.0, 2.0).astype(jnp.float32)).max())
+        f, u = _traffic_fedavg(n, 2)
+        rows.append(f"bench_kernels,fedavg_accum,{n},{err:.2e},"
+                    f"{f / 1e6:.2f},{u / 1e6:.2f},{u / f:.2f}x")
+    # flash attention
+    for (b, s, hq, hkv, d) in [(1, 256, 4, 2, 64), (1, 512, 8, 2, 64)]:
+        q = jax.random.normal(k, (b, s, hq, d))
+        kk = jax.random.normal(jax.random.fold_in(k, 2), (b, s, hkv, d))
+        v = jax.random.normal(jax.random.fold_in(k, 3), (b, s, hkv, d))
+        out = ops.flash_attention(q, kk, v, causal=True, block_q=128,
+                                  block_k=128)
+        want = jnp.moveaxis(ref.attention_ref(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(kk, 2, 1),
+            jnp.moveaxis(v, 2, 1)), 1, 2)
+        err = float(jnp.abs(out - want).max())
+        f, u = _traffic_attention(b, s, hq, hkv, d, 4)
+        rows.append(f"bench_kernels,flash_attention,b{b}s{s}h{hq},{err:.2e},"
+                    f"{f / 1e6:.2f},{u / 1e6:.2f},{u / f:.2f}x")
+    # ssd
+    ks = jax.random.split(k, 6)
+    b, s, h, p, g, n = 1, 256, 4, 64, 1, 64
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = jax.random.normal(ks[2], (h,)) * 0.3
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jax.random.normal(ks[5], (h,)) * 0.1
+    out = ops.ssd(x, dt, A_log, B, C, D, chunk=64)
+    want = jnp.moveaxis(ref.ssd_ref(
+        jnp.moveaxis(x, 2, 1), jnp.moveaxis(dt, 2, 1), A_log,
+        jnp.moveaxis(B, 2, 1), jnp.moveaxis(C, 2, 1), D), 1, 2)
+    err = float(jnp.abs(out - want).max())
+    io = (2 * b * s * h * p + 2 * b * s * g * n) * 4
+    states = (s // 64) * b * h * p * n * 4       # per-chunk state roundtrips
+    rows.append(f"bench_kernels,ssd,b{b}s{s}h{h},{err:.2e},"
+                f"{io / 1e6:.2f},{(io + 2 * states) / 1e6:.2f},"
+                f"{(io + 2 * states) / io:.2f}x")
+    # rmsnorm
+    x = jax.random.normal(k, (512, 1024))
+    sc = jnp.ones(1024)
+    err = float(jnp.abs(ops.rmsnorm(x, sc) - ref.rmsnorm_ref(x, sc)).max())
+    nb = x.size * 4
+    rows.append(f"bench_kernels,rmsnorm,512x1024,{err:.2e},"
+                f"{2 * nb / 1e6:.2f},{3 * nb / 1e6:.2f},1.50x")
+    return rows

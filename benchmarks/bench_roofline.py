@@ -1,0 +1,55 @@
+"""§Roofline table: reads the dry-run artifacts (results/dryrun/*.json) and
+prints the per-(arch × shape × mesh) roofline terms — compute / memory /
+collective seconds, the dominant term, MODEL_FLOPS/HLO_FLOPs, and the
+roofline fraction.  This is deliverable (g)'s table; the dry-run must have
+run first (``python -m repro.launch.dryrun --mesh both``)."""
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun_v3")
+
+
+def load_records(mesh=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run() -> list[str]:
+    rows = ["bench_roofline,arch,shape,mesh,status,compute_s,memory_s,"
+            "collective_s,dominant,useful_ratio,roofline_fraction"]
+    recs = load_records()
+    if not recs:
+        rows.append("bench_roofline,NO_DRYRUN_RESULTS,run "
+                    "`python -m repro.launch.dryrun --mesh both` first,,,,,,,,")
+        return rows
+    n_ok = n_skip = n_fail = 0
+    for r in recs:
+        if r.get("status") == "skip":
+            n_skip += 1
+            rows.append(f"bench_roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                        f"skip,,,,,,")
+            continue
+        if r.get("status") != "ok":
+            n_fail += 1
+            rows.append(f"bench_roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                        f"FAIL,,,,,,")
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        rows.append(
+            f"bench_roofline,{r['arch']},{r['shape']},{r['mesh']},ok,"
+            f"{t['compute_s']:.4f},{t['memory_s']:.4f},"
+            f"{t['collective_s']:.4f},{t['dominant']},"
+            f"{r['useful_ratio']:.3f},{t['roofline_fraction']:.4f}")
+    rows.append(f"bench_roofline,SUMMARY,ok={n_ok},skip={n_skip},"
+                f"fail={n_fail},,,,,,")
+    assert n_fail == 0, "dry-run contains failed cells"
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Figs. 1/11-13 (+A.2): cohort-size scalability.  Medium (100),
+large (1000) and very-large (10000; SR capped at 2000 as in Table 1)
+cohorts on the multi-node cluster; asterisks = training failures (FedScale's
+very-large aggregation failure is reproduced as an exception)."""
+
+import numpy as np
+
+from repro.data import make_federated_dataset
+from repro.simcluster import TASKS, multi_node, run_experiment
+
+SCALES = {"tg": (100, 1000, 10_000), "ic": (100, 1000, 10_000),
+          "sr": (100, 1000, 2_000), "mlm": (100, 1000, 10_000)}
+FRAMEWORKS = ("pollen", "flower", "fedscale", "flute", "parrot")
+
+
+def run(*, rounds: int = 4, tasks=("tg", "ic")) -> list[str]:
+    rows = ["bench_scalability,task,cohort,framework,round_s,total_5000r_d"]
+    for task in tasks:
+        ds = make_federated_dataset(task)
+        for cohort in SCALES[task]:
+            totals = {}
+            for fw in FRAMEWORKS:
+                rng = np.random.default_rng(23)
+                sampler = lambda r: [
+                    ds.n_batches(int(c)) for c in
+                    rng.choice(ds.n_clients, size=cohort,
+                               replace=cohort > ds.n_clients)]
+                try:
+                    res = run_experiment(fw, TASKS[task], multi_node(),
+                                         sampler, rounds=rounds)
+                except RuntimeError as e:   # paper's asterisks
+                    rows.append(f"bench_scalability,{task},{cohort},{fw},"
+                                f"FAIL,{e}")
+                    continue
+                totals[fw] = res.total_time
+                rows.append(f"bench_scalability,{task},{cohort},{fw},"
+                            f"{res.mean_round_time:.1f},"
+                            f"{res.total_time / 86400:.2f}")
+            assert totals["pollen"] == min(totals.values()), (task, cohort)
+        # the gap must GROW with scale (paper: improvements compound)
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Tables 4/5: single-round GPU utilization % and VRAM allocation %
+per framework on the single-node setting (second round, as in the paper)."""
+
+import numpy as np
+
+from repro.data import make_federated_dataset
+from repro.simcluster import TASKS, run_experiment, single_node
+
+FRAMEWORKS = ("pollen", "flower", "fedscale", "flute", "parrot")
+
+
+def run(*, cohort: int = 100) -> list[str]:
+    rows = ["bench_utilization,task,framework,gpu_util_pct,vram_pct"]
+    for task in ("ic", "mlm", "sr", "tg"):
+        ds = make_federated_dataset(task)
+        utils = {}
+        for fw in FRAMEWORKS:
+            rng = np.random.default_rng(5)
+            sampler = lambda r: [ds.n_batches(int(c)) for c in
+                                 rng.choice(ds.n_clients, size=cohort)]
+            res = run_experiment(fw, TASKS[task], single_node(), sampler,
+                                 rounds=2)
+            r2 = res.rounds[1]          # second round (skip init effects)
+            utils[fw] = r2.gpu_utilization
+            rows.append(f"bench_utilization,{task},{fw},"
+                        f"{100 * r2.gpu_utilization:.1f},"
+                        f"{100 * r2.vram_fraction:.1f}")
+        # Table 4/5 structure: concurrency-aware frameworks beat the
+        # one-worker-per-GPU designs on utilization
+        assert utils["pollen"] > utils["flute"], task
+        assert utils["pollen"] > utils["parrot"], task
+    return rows

@@ -1,0 +1,39 @@
+"""End-to-end driver: federated training of an assigned LM architecture.
+
+Runs the full production stack — federated token dataset, cohort sampling,
+LB placement, the jitted Pollen round step (per-client SGD + streaming
+partial aggregation), telemetry-driven refitting, checkpoint/restart — on a
+reduced qwen3 config sized for CPU.  Swap ``--preset fl100m`` to train the
+~100M-parameter config on real hardware.
+
+    PYTHONPATH=src python examples/federated_lm.py
+"""
+
+import tempfile
+
+from repro.launch.train import build_engine
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        engine = build_engine(arch="qwen3-0.6b", preset="smoke",
+                              placement="lb", cohort=6, workers=2,
+                              concurrency=2, steps_cap=4,
+                              rounds_per_checkpoint=4, ckpt_dir=ckpt_dir)
+        hist = engine.run(8, log_every=2)
+        print(f"loss: {hist[0].loss:.3f} -> {hist[-1].loss:.3f}")
+
+        # kill-and-resume: restart from the latest checkpoint
+        engine2 = build_engine(arch="qwen3-0.6b", preset="smoke",
+                               placement="lb", cohort=6, workers=2,
+                               concurrency=2, steps_cap=4,
+                               rounds_per_checkpoint=4, ckpt_dir=ckpt_dir)
+        assert engine2.restore_latest()
+        print(f"resumed at round {engine2.round_idx} "
+              f"(telemetry warm: {not engine2.placement.used_fallback})")
+        hist2 = engine2.run(4, log_every=2)
+        print(f"post-resume loss: {hist2[-1].loss:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Mini reproduction of paper Fig. 9: all five FL simulators on the
+heterogeneous multi-node cluster (1×A40 + 3×2080 Ti), Image Classification,
+100 clients/round — round time, extrapolated experiment time, GPU util.
+
+    PYTHONPATH=src python examples/framework_comparison.py
+"""
+
+import numpy as np
+
+from repro.data import make_federated_dataset
+from repro.simcluster import TASKS, multi_node, run_experiment
+
+
+def main():
+    ds = make_federated_dataset("ic")
+    print(f"{'framework':12s} {'round':>8s} {'5000 rounds':>12s} "
+          f"{'GPU util':>9s} {'idle/round':>11s}")
+    for fw in ("pollen", "pollen_rr", "pollen_bb", "parrot", "flower",
+               "fedscale", "flute"):
+        rng = np.random.default_rng(11)
+        sampler = lambda r: [ds.n_batches(int(c)) for c in
+                             rng.choice(ds.n_clients, size=100)]
+        res = run_experiment(fw, TASKS["ic"], multi_node(), sampler,
+                             rounds=8)
+        print(f"{fw:12s} {res.mean_round_time:7.1f}s "
+              f"{res.total_time / 86400:10.2f}d "
+              f"{100 * res.mean_utilization:8.1f}% "
+              f"{res.mean_idle:10.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: a complete federated experiment in ~20 lines.
+
+Trains the paper's Speech-Recognition task (ResNet-style classifier on a
+naturally-skewed federated dataset) for 15 rounds with Pollen's
+learning-based placement, then reruns with Round-Robin to show the idle-time
+difference (paper Table 2, in miniature).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.launch.train import build_engine
+
+
+def main():
+    results = {}
+    for placement in ("lb", "rr"):
+        engine = build_engine(task="sr", placement=placement, cohort=12,
+                              workers=3, concurrency=2, steps_cap=6,
+                              worker_specs=[("a40", 1.0, 2),
+                                            ("2080ti", 0.4, 2),
+                                            ("2080ti", 0.4, 2)])
+        hist = engine.run(15, log_every=5)
+        results[placement] = hist
+        print(f"[{placement}] final loss {hist[-1].loss:.4f}  "
+              f"total idle {sum(r.idle_time for r in hist):.1f}s")
+
+    lb_idle = sum(r.idle_time for r in results["lb"][3:])
+    rr_idle = sum(r.idle_time for r in results["rr"][3:])
+    print(f"\nLearning-Based placement idle = {lb_idle:.0f}s vs "
+          f"Round-Robin = {rr_idle:.0f}s "
+          f"({100 * (1 - lb_idle / rr_idle):.0f}% reduction)")
+    assert np.isfinite(results["lb"][-1].loss)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .store import CheckpointStore, save_pytree, load_pytree
+
+__all__ = ["CheckpointStore", "save_pytree", "load_pytree"]

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: atomic npz snapshots + JSON manifest.
+
+FL rounds are synchronous barriers, so round granularity is the natural
+consistency point.  A checkpoint holds: global model, round index, telemetry
+store (so the placement model resumes warm), sampler RNG state, and arbitrary
+user metadata.  Writes are crash-safe via write-to-temp + ``os.replace``;
+``keep`` old checkpoints are retained for rollback.  No orbax in this
+environment — plain numpy + json is deliberately dependency-free.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointStore"]
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree) -> None:
+    """Atomically save a pytree's leaves (structure restored by example)."""
+    arrays = _flatten_with_paths(tree)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_pytree(path: str, like):
+    """Load leaves saved by :func:`save_pytree` into the structure of ``like``."""
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathkeys, leaf in flat[0]:
+        key = "/".join(str(p) for p in pathkeys)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        leaves.append(np.asarray(arr, dtype=np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+class CheckpointStore:
+    """Directory of round checkpoints with a manifest and keep-k GC."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self.manifest_path = os.path.join(directory, "manifest.json")
+
+    # -- manifest ------------------------------------------------------------
+    def _read_manifest(self) -> dict:
+        if not os.path.exists(self.manifest_path):
+            return {"checkpoints": []}
+        with open(self.manifest_path) as f:
+            return json.load(f)
+
+    def _write_manifest(self, m: dict) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".json.tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(m, f, indent=1)
+        os.replace(tmp, self.manifest_path)
+
+    # -- save/restore ----------------------------------------------------------
+    def save(self, round_idx: int, params, *, extra: dict | None = None) -> str:
+        """Snapshot params + JSON-serializable extra state for a round."""
+        name = f"round_{round_idx:08d}"
+        pt_path = os.path.join(self.dir, name + ".npz")
+        save_pytree(pt_path, params)
+        meta = {"round": int(round_idx), "params": os.path.basename(pt_path),
+                "extra": extra or {}}
+        meta_path = os.path.join(self.dir, name + ".json")
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".json.tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, meta_path)
+        m = self._read_manifest()
+        m["checkpoints"] = [c for c in m["checkpoints"] if c["round"] != round_idx]
+        m["checkpoints"].append({"round": int(round_idx), "name": name})
+        m["checkpoints"].sort(key=lambda c: c["round"])
+        # keep-k garbage collection
+        while len(m["checkpoints"]) > self.keep:
+            old = m["checkpoints"].pop(0)
+            for suffix in (".npz", ".json"):
+                p = os.path.join(self.dir, old["name"] + suffix)
+                if os.path.exists(p):
+                    os.unlink(p)
+        self._write_manifest(m)
+        return pt_path
+
+    def latest_round(self) -> int | None:
+        cs = self._read_manifest()["checkpoints"]
+        return cs[-1]["round"] if cs else None
+
+    def restore(self, like_params, *, round_idx: int | None = None):
+        """Return (params, round, extra) for the requested/latest checkpoint."""
+        cs = self._read_manifest()["checkpoints"]
+        if not cs:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        if round_idx is None:
+            entry = cs[-1]
+        else:
+            matches = [c for c in cs if c["round"] == round_idx]
+            if not matches:
+                raise FileNotFoundError(f"no checkpoint for round {round_idx}")
+            entry = matches[0]
+        name = entry["name"]
+        with open(os.path.join(self.dir, name + ".json")) as f:
+            meta = json.load(f)
+        params = load_pytree(os.path.join(self.dir, name + ".npz"), like_params)
+        return params, meta["round"], meta.get("extra", {})

@@ -1,0 +1,19 @@
+"""Update compression for the cross-pod (DCN) hop.
+
+Pollen's hierarchy makes the node→server partial upload the only traffic
+that crosses the slow boundary (DCN between pods; WAN in real FL).  Two
+standard compressors shrink it:
+
+* top-k sparsification with error feedback (the residual accumulates and is
+  re-sent later — unbiased in the long run);
+* symmetric per-tensor int8 quantization.
+
+Both are pure pytree transforms usable inside or outside jit.
+"""
+
+from repro.compress.topk import (TopKState, topk_compress, topk_decompress,
+                                 topk_init)
+from repro.compress.quant import int8_dequantize, int8_quantize
+
+__all__ = ["TopKState", "topk_init", "topk_compress", "topk_decompress",
+           "int8_quantize", "int8_dequantize"]

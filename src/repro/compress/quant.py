@@ -1,0 +1,32 @@
+"""Symmetric per-tensor int8 quantization for partial-aggregate uploads."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_quantize", "int8_dequantize"]
+
+
+def int8_quantize(tree):
+    """tree -> (int8 tree, scales tree); scale = max|v| / 127 per leaf."""
+
+    def q(x):
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8), \
+            scale
+
+    pairs = jax.tree.map(q, tree)
+    qs = jax.tree.map(lambda p: p[0], pairs,
+                      is_leaf=lambda v: isinstance(v, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda v: isinstance(v, tuple))
+    return qs, scales
+
+
+def int8_dequantize(qs, scales, like_tree=None):
+    out = jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+    if like_tree is not None:
+        out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like_tree)
+    return out

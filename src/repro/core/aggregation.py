@@ -1,0 +1,161 @@
+"""Hierarchical partial aggregation (paper §3.3, Eq. 1–2).
+
+For *associative* strategies (FedAvg) the worker keeps a streaming weighted
+average of trained client models::
+
+    theta_{k+1}^w = (theta_k^w * N_k + theta_{k+1} * n_{k+1}) / N_{k+1}   (Eq. 1)
+    N_{k+1}^w     = N_k^w + n_{k+1}                                       (Eq. 2)
+
+so each worker/node uploads exactly one model regardless of how many clients
+it trained — constant-size node→server communication (paper A.3).
+
+Non-associative strategies (FedMedian) cannot partially aggregate; workers
+ship every client model and the server reduces them in one shot (paper §3.3
+last paragraph) — implemented here as the gather path.
+
+All functions are pytree-polymorphic and jit-friendly; the streaming update is
+the compute hot-spot the paper times in Tables 6/7, so it is also available as
+a fused Pallas TPU kernel (``repro.kernels.ops.fedavg_accum``) selected with
+``impl='pallas'``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PartialAggregate",
+    "partial_init",
+    "partial_update",
+    "partial_merge",
+    "finalize",
+    "fedavg_flat",
+    "fedmedian",
+    "tree_weighted_mean",
+]
+
+
+class PartialAggregate(NamedTuple):
+    """(theta_tree, weight scalar) — a worker's running partial."""
+
+    theta: Any
+    weight: Any
+
+
+def partial_init(like_tree):
+    """Zero partial with zero weight (identity of the monoid)."""
+    zeros = jax.tree.map(jnp.zeros_like, like_tree)
+    return PartialAggregate(zeros, jnp.zeros((), dtype=jnp.float32))
+
+
+def _accum_leaf_xla(acc, theta, n_old, n_new_total, n_k):
+    # (acc*N + theta*n) / (N + n); guard the cold-start N==n==0 case.
+    denom = jnp.maximum(n_new_total, 1e-20).astype(acc.dtype)
+    return (acc * n_old.astype(acc.dtype) + theta * n_k.astype(acc.dtype)) / denom
+
+
+def partial_update(partial: PartialAggregate, client_theta, n_k,
+                   *, impl: str = "xla") -> PartialAggregate:
+    """Eq. 1/2: fold one trained client model into the running partial.
+
+    ``n_k`` may be a traced scalar (masked to 0 for padded client slots, which
+    makes padded slots exact no-ops — the TPU analogue of "worker skips an
+    empty queue entry").
+    """
+    acc, n_old = partial
+    n_k = jnp.asarray(n_k, dtype=jnp.float32)
+    n_new = n_old + n_k
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        new_acc = jax.tree.map(
+            lambda a, t: kops.fedavg_accum(a, t, n_old, n_k), acc, client_theta)
+    else:
+        new_acc = jax.tree.map(
+            lambda a, t: _accum_leaf_xla(a, t, n_old, n_new, n_k),
+            acc, client_theta)
+    return PartialAggregate(new_acc, n_new)
+
+
+def partial_merge(p1: PartialAggregate, p2: PartialAggregate) -> PartialAggregate:
+    """Associative merge of two partials (node-level combine)."""
+    t1, n1 = p1
+    t2, n2 = p2
+    n = n1 + n2
+    denom = jnp.maximum(n, 1e-20)
+    theta = jax.tree.map(
+        lambda a, b: (a * n1.astype(a.dtype) + b * n2.astype(b.dtype)) / denom.astype(a.dtype),
+        t1, t2)
+    return PartialAggregate(theta, n)
+
+
+def finalize(partial: PartialAggregate):
+    """A finished partial already holds the weighted mean; return the tree."""
+    return partial.theta
+
+
+def tree_weighted_mean(stacked_tree, weights, *, axis_name: str | None = None):
+    """Weighted mean over the leading (worker) dim of every leaf.
+
+    Inside pjit, when the leading dim is sharded over mesh axes, XLA lowers
+    this to the hierarchical reduce the paper's node→server combine describes.
+    With ``axis_name`` (inside shard_map) it uses an explicit psum instead.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    if axis_name is None:
+        denom = jnp.maximum(w.sum(), 1e-20)
+
+        def leaf(x):
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+            return (x * wb).sum(axis=0) / denom.astype(x.dtype)
+
+        return jax.tree.map(leaf, stacked_tree)
+    # shard_map path: per-shard partial sums + psum.
+    num = jax.tree.map(lambda x: jax.lax.psum((x * w.astype(x.dtype)), axis_name),
+                       stacked_tree)
+    den = jax.lax.psum(w.sum(), axis_name)
+    return jax.tree.map(lambda x: x / jnp.maximum(den, 1e-20).astype(x.dtype), num)
+
+
+def fedavg_flat(client_trees: list, weights) -> object:
+    """Reference one-shot FedAvg over a list of client pytrees (the oracle
+    that partial aggregation must match; used in tests/benchmarks)."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    denom = jnp.maximum(w.sum(), 1e-20)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *client_trees)
+
+    def leaf(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return (x * wb).sum(axis=0) / denom.astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def fedmedian(client_trees: list) -> object:
+    """Coordinate-wise median (non-associative robust aggregation — the
+    paper's Table 7 strategy).  Requires the gather path: all client models
+    at the server."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *client_trees)
+    return jax.tree.map(lambda x: jnp.median(x, axis=0), stacked)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fold_clients(global_params, client_params_stacked, n_samples, *, impl="xla"):
+    """Fold K stacked client models into one partial via lax.scan over Eq. 1.
+
+    client_params_stacked: pytree with leading dim K.
+    n_samples: (K,) float weights (0 ⇒ padded slot, exact no-op).
+    Returns the worker's partially-aggregated model (weighted mean).
+    """
+    init = partial_init(global_params)
+
+    def body(partial, inp):
+        theta_k, n_k = inp
+        return partial_update(partial, theta_k, n_k, impl=impl), None
+
+    out, _ = jax.lax.scan(body, init, (client_params_stacked,
+                                       jnp.asarray(n_samples, jnp.float32)))
+    return finalize(out), out.weight

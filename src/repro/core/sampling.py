@@ -1,0 +1,72 @@
+"""Cohort sampling (paper §3.1: placement is independent of selection).
+
+Pollen runs *after* any client-selection algorithm; we provide the samplers
+the paper references so the engine can compose them with any placement:
+
+* uniform without replacement (default; with replacement when the population
+  is too small, per §5.4),
+* Power-of-Choice (Cho et al., 2020): oversample d clients, keep the m with
+  the highest local loss,
+* a FedCS-style deadline filter (Nishio & Yonetani, 2019): drop clients whose
+  predicted round time exceeds a deadline — composes with the time model.
+
+All samplers are deterministic given a seed (paper A.1 uses seed 1337).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["UniformSampler", "PowerOfChoiceSampler", "DeadlineFilter"]
+
+
+class UniformSampler:
+    def __init__(self, population: int, cohort_size: int, *, seed: int = 1337):
+        if cohort_size <= 0:
+            raise ValueError("cohort_size must be positive")
+        self.population = population
+        self.cohort_size = cohort_size
+        self.rng = np.random.default_rng(seed)
+        self.with_replacement = cohort_size > population
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        """Sample client ids for a round (paper: 0.1% of population)."""
+        return self.rng.choice(self.population, size=self.cohort_size,
+                               replace=self.with_replacement)
+
+
+class PowerOfChoiceSampler:
+    """Oversample ``d >= m`` candidates, pick the m largest by loss."""
+
+    def __init__(self, population: int, cohort_size: int, *, d: int | None = None,
+                 seed: int = 1337):
+        self.population = population
+        self.cohort_size = cohort_size
+        self.d = d or min(population, 2 * cohort_size)
+        if self.d < cohort_size:
+            raise ValueError("d must be >= cohort_size")
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, round_idx: int, client_loss) -> np.ndarray:
+        cand = self.rng.choice(self.population, size=self.d,
+                               replace=self.d > self.population)
+        losses = np.asarray([client_loss(int(c)) for c in cand])
+        top = np.argsort(-losses)[: self.cohort_size]
+        return cand[top]
+
+
+class DeadlineFilter:
+    """FedCS-style: keep clients whose predicted time fits the deadline.
+
+    ``predict(x)`` is typically the placement time model's g(x); clients with
+    no prediction pass through (optimistic, like FedCS's first rounds).
+    """
+
+    def __init__(self, deadline: float):
+        self.deadline = float(deadline)
+
+    def filter(self, client_batches: np.ndarray, predict=None) -> np.ndarray:
+        if predict is None:
+            return np.ones(len(client_batches), dtype=bool)
+        pred = np.atleast_1d(predict(np.asarray(client_batches, dtype=np.float64)))
+        return pred <= self.deadline

@@ -1,0 +1,5 @@
+from .federated import FederatedDataset, TASK_DISTRIBUTIONS, make_federated_dataset
+from .batching import RoundArrays, build_round_arrays, lane_split, padding_stats
+
+__all__ = ["FederatedDataset", "TASK_DISTRIBUTIONS", "make_federated_dataset",
+           "RoundArrays", "build_round_arrays", "lane_split", "padding_stats"]

@@ -1,0 +1,112 @@
+"""Round-batch construction: turn a placement Assignment into padded device
+arrays for the jitted round step.
+
+Execution model (the TPU adaptation of Pollen's worker processes):
+
+* each FL **worker** owns ``P`` parallel **lanes** (the concurrency level from
+  the estimator — the analogue of multiple worker processes per GPU);
+* each lane trains its assigned clients **sequentially as a stream of local
+  steps**: client k's batches, then a *boundary* step where the trained model
+  is folded into the worker's partial aggregate (Eq. 1) and parameters reset
+  to the global model — then client k+1's batches, and so on;
+* all lanes are padded to the longest stream ``S``.  Padded steps are masked
+  (zero gradient, zero aggregation weight) — **pure waste**.
+
+The makespan of lane streams is exactly the paper's straggler/idle-time
+metric: LB placement balances predicted per-worker time, which here minimizes
+``S`` and therefore the wasted padded steps.  ``padding_stats`` reports the
+useful-compute fraction, which reappears in §Roofline as MODEL_FLOPS/HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["build_round_arrays", "RoundArrays", "padding_stats", "lane_split"]
+
+
+@dataclass
+class RoundArrays:
+    """Host-side numpy arrays for one round, ready for device_put.
+
+    Leaf shapes: batches[name] = [W, P, S, b, ...]; masks = [W, P, S].
+    """
+
+    batches: dict            # name -> [W, P, S, b, ...]
+    step_mask: np.ndarray    # [W, P, S] f32 — 1 for real local steps
+    boundary: np.ndarray     # [W, P, S] f32 — 1 at a client's last step
+    weight: np.ndarray       # [W, P, S] f32 — client weight at its boundary
+    n_steps: int             # S
+
+    def useful_fraction(self) -> float:
+        return float(self.step_mask.mean())
+
+
+def lane_split(clients, n_lanes: int, *, steps_cap=None):
+    """LPT-split one worker's client list across its P lanes.
+
+    Returns (lanes, loads): lanes[p] = [(client, n_steps), ...].
+    """
+    lanes = [[] for _ in range(n_lanes)]
+    loads = np.zeros(n_lanes, dtype=np.int64)
+    for c in sorted(clients, key=lambda c: -c.n_batches):
+        nb = c.n_batches if steps_cap is None else min(c.n_batches, steps_cap)
+        p = int(np.argmin(loads))
+        lanes[p].append((c, nb))
+        loads[p] += nb
+    return lanes, loads
+
+
+def build_round_arrays(dataset, assignment, workers, *, lanes_per_worker: int = 1,
+                       steps_cap: int | None = None, batch_size: int | None = None,
+                       seq_len: int | None = None, min_steps: int = 1) -> RoundArrays:
+    """Materialize padded [W, P, S, ...] stream arrays for an assignment."""
+    order = sorted(workers, key=lambda w: w.wid)
+    W, P = len(order), lanes_per_worker
+
+    streams: dict[tuple[int, int], list] = {}
+    max_len = min_steps
+    for wi, w in enumerate(order):
+        lanes, loads = lane_split(assignment.per_worker.get(w.wid, []), P,
+                                  steps_cap=steps_cap)
+        for p, lane in enumerate(lanes):
+            streams[(wi, p)] = lane
+            max_len = max(max_len, int(loads[p]))
+    S = int(max_len)
+
+    sample = dataset.client_batch(0, 0, batch_size=batch_size, seq_len=seq_len)
+    batches = {name: np.zeros((W, P, S) + tuple(np.shape(arr)),
+                              np.asarray(arr).dtype)
+               for name, arr in sample.items()}
+    step_mask = np.zeros((W, P, S), dtype=np.float32)
+    boundary = np.zeros((W, P, S), dtype=np.float32)
+    weight = np.zeros((W, P, S), dtype=np.float32)
+
+    for (wi, p), lane in streams.items():
+        s = 0
+        for c, nb in lane:
+            for bi in range(nb):
+                b = dataset.client_batch(c.cid, bi, batch_size=batch_size,
+                                         seq_len=seq_len)
+                for name, arr in b.items():
+                    batches[name][wi, p, s] = np.asarray(arr)
+                step_mask[wi, p, s] = 1.0
+                s += 1
+            boundary[wi, p, s - 1] = 1.0       # fold this client at its last step
+            weight[wi, p, s - 1] = float(c.weight)
+
+    return RoundArrays(batches=batches, step_mask=step_mask, boundary=boundary,
+                       weight=weight, n_steps=S)
+
+
+def padding_stats(round_arrays: RoundArrays) -> dict:
+    m = round_arrays.step_mask
+    return {
+        "useful_steps": int(m.sum()),
+        "total_steps": int(m.size),
+        "useful_fraction": float(m.mean()),
+        "S": round_arrays.n_steps,
+        "clients_folded": int(round_arrays.boundary.sum()),
+    }

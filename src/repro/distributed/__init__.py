@@ -1,0 +1,4 @@
+from .elastic import WorkerPool, FailureEvent
+from .sharding import ShardingRules, make_sharding_rules
+
+__all__ = ["WorkerPool", "FailureEvent", "ShardingRules", "make_sharding_rules"]

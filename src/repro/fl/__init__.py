@@ -1,0 +1,5 @@
+from .round import make_round_step, make_gather_round_step, RoundMetrics
+from .strategy import FedAvg, FedMedian, Strategy
+
+__all__ = ["make_round_step", "make_gather_round_step", "RoundMetrics",
+           "FedAvg", "FedMedian", "Strategy"]

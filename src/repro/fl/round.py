@@ -1,0 +1,181 @@
+"""The federated round as a single pure function (paper Fig. 5b on TPU).
+
+``make_round_step(loss_fn, optimizer)`` builds::
+
+    round_step(global_params, arrays) -> (new_global_params, RoundMetrics)
+
+where ``arrays`` is a :class:`repro.data.batching.RoundArrays`-shaped pytree
+of device arrays with leaves [W, P, S, ...]:
+
+* the (W, P) lane grid is vmapped — on the production mesh the W dim is
+  sharded over the FL worker axes (``data`` and/or ``pod``), so every worker
+  trains its lanes in parallel, exactly Pollen's concurrent worker processes;
+* the S dim is a ``lax.scan`` — the lane's sequential client stream;
+* at a client's *boundary* step, the trained parameters are folded into the
+  lane's running partial aggregate (Eq. 1; zero-weight ⇒ exact no-op) and the
+  lane resets to the global parameters (the paper's §3.4 in-place model
+  restore — here a ``jnp.where`` select that XLA fuses in place thanks to
+  buffer donation);
+* after the scan, lane partials are combined with a weighted mean over the
+  sharded (W, P) grid — XLA lowers this to the hierarchical node→server
+  reduction of §3.3 (per-pod reduce, cross-pod all-reduce).
+
+Masked (padded) steps contribute zero gradient and zero weight; they are the
+idle time the placement model minimizes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import (PartialAggregate, partial_init,
+                                    partial_update, tree_weighted_mean)
+from repro.optim.optimizers import apply_updates
+
+__all__ = ["make_round_step", "make_gather_round_step", "RoundMetrics"]
+
+
+class RoundMetrics(NamedTuple):
+    loss: Any            # masked mean loss over all real steps
+    steps: Any           # number of real local steps executed
+    clients: Any         # number of clients folded
+    total_weight: Any    # sum of aggregation weights
+
+
+def _tree_select(flag, a, b):
+    """Elementwise pytree select; ``flag`` is a scalar traced bool/float."""
+    return jax.tree.map(lambda x, y: jnp.where(flag, x.astype(y.dtype), y), a, b)
+
+
+def make_round_step(loss_fn, optimizer, *, agg_impl: str = "xla",
+                    grad_clip: float | None = None,
+                    worker_spmd_axes=None):
+    """Build the jittable federated round function.
+
+    loss_fn(params, batch) -> scalar loss (batch is a dict of arrays for one
+    local step).  optimizer is a repro.optim.Optimizer.
+
+    ``worker_spmd_axes``: mesh axis name (or tuple) the FL-worker dim W is
+    sharded over.  Passed as ``spmd_axis_name`` to the worker vmap so every
+    per-worker intermediate — the evolving client parameters, optimizer
+    state, and partial aggregate — is *constrained* to shard its W dim over
+    those axes instead of relying on XLA propagation (which may otherwise
+    replicate W copies of the client model on every chip).
+    """
+
+    def lane_scan(global_params, lane_batches, mask, boundary, weight):
+        opt0 = optimizer.init(global_params)
+        partial0 = partial_init(global_params)
+
+        def step(carry, inp):
+            theta, opt_state, partial = carry
+            batch, m, bnd, w = inp
+            loss, grads = jax.value_and_grad(loss_fn)(theta, batch)
+            if grad_clip is not None:
+                from repro.optim.optimizers import clip_by_global_norm
+                grads, _ = clip_by_global_norm(grads, grad_clip)
+            updates, new_opt = optimizer.update(grads, opt_state, theta)
+            # mask cast per-leaf: bf16 * f32-mask would promote a whole
+            # param-shaped temporary to f32 (observed in the dry-run HLO)
+            theta = apply_updates(
+                theta, jax.tree.map(lambda u: u * m.astype(u.dtype), updates))
+            # Masked steps keep the old optimizer state (exact no-op).
+            opt_state = _tree_select(m > 0, new_opt, opt_state)
+            # Fold the trained client at its boundary (w*bnd == 0 ⇒ no-op).
+            partial = partial_update(partial, theta, w * bnd, impl=agg_impl)
+            # Reset lane to the global model for the next client.
+            theta = _tree_select(bnd > 0, global_params, theta)
+            opt_state = _tree_select(bnd > 0, opt0, opt_state)
+            return (theta, opt_state, partial), loss * m
+
+        (_, _, partial), losses = jax.lax.scan(
+            step, (global_params, opt0, partial0),
+            (lane_batches, mask, boundary, weight))
+        return partial, losses
+
+    def round_step(global_params, batches, step_mask, boundary, weight):
+        W, Pn = step_mask.shape[:2]
+        if W == 1 and Pn == 1:
+            # single-worker fast path: no vmap wrappers, so manual-collective
+            # layers (shard_map EP dispatch, §Perf B3) can live inside.
+            squeezed = jax.tree.map(lambda x: x[0, 0], batches)
+            partial, losses1 = lane_scan(global_params, squeezed,
+                                         step_mask[0, 0], boundary[0, 0],
+                                         weight[0, 0])
+            partials = jax.tree.map(lambda x: x[None, None], partial)
+            losses = losses1[None, None]
+        else:
+            # vmap lanes over P then workers over W; params broadcast
+            # (replicated or FSDP-sharded — the sharding rules decide).
+            per_lane = jax.vmap(lane_scan, in_axes=(None, 0, 0, 0, 0))
+            per_worker = jax.vmap(per_lane, in_axes=(None, 0, 0, 0, 0),
+                                  spmd_axis_name=worker_spmd_axes)
+            partials, losses = per_worker(global_params, batches, step_mask,
+                                          boundary, weight)
+        theta_wp, n_wp = partials                     # leaves [W,P,...], [W,P]
+        flat_w = n_wp.reshape(-1)
+        flat_theta = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                                  theta_wp)
+        total_w = flat_w.sum()
+        mean = tree_weighted_mean(flat_theta, flat_w)
+        # If the round somehow folded nothing, keep the old global model.
+        new_global = jax.tree.map(
+            lambda m_, g: jnp.where(total_w > 0, m_.astype(g.dtype), g),
+            mean, global_params)
+        n_steps = step_mask.sum()
+        metrics = RoundMetrics(
+            loss=losses.sum() / jnp.maximum(n_steps, 1.0),
+            steps=n_steps,
+            clients=boundary.sum(),
+            total_weight=total_w,
+        )
+        return new_global, metrics
+
+    return round_step
+
+
+def make_gather_round_step(loss_fn, optimizer, *, grad_clip: float | None = None):
+    """Round step for NON-associative strategies (paper §3.3 last paragraph):
+    workers return every trained client model; the server reduces in one shot
+    (e.g. FedMedian).  Requires one client per lane (the engine enforces it).
+
+    Returns ``round_step(global_params, ...) -> (stacked_client_params [W*P,...],
+    weights [W*P], metrics)``; the caller applies the strategy's reduce.
+    """
+
+    def lane_scan(global_params, lane_batches, mask, boundary, weight):
+        opt0 = optimizer.init(global_params)
+
+        def step(carry, inp):
+            theta, opt_state = carry
+            batch, m = inp
+            loss, grads = jax.value_and_grad(loss_fn)(theta, batch)
+            if grad_clip is not None:
+                from repro.optim.optimizers import clip_by_global_norm
+                grads, _ = clip_by_global_norm(grads, grad_clip)
+            updates, new_opt = optimizer.update(grads, opt_state, theta)
+            theta = apply_updates(theta, jax.tree.map(lambda u: u * m, updates))
+            opt_state = _tree_select(m > 0, new_opt, opt_state)
+            return (theta, opt_state), loss * m
+
+        (theta, _), losses = jax.lax.scan(step, (global_params, opt0),
+                                          (lane_batches, mask))
+        return theta, (boundary * weight).sum(), losses
+
+    def round_step(global_params, batches, step_mask, boundary, weight):
+        per_lane = jax.vmap(lane_scan, in_axes=(None, 0, 0, 0, 0))
+        per_worker = jax.vmap(per_lane, in_axes=(None, 0, 0, 0, 0))
+        thetas, ws, losses = per_worker(global_params, batches, step_mask,
+                                        boundary, weight)
+        flat_theta = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), thetas)
+        flat_w = ws.reshape(-1)
+        n_steps = step_mask.sum()
+        metrics = RoundMetrics(loss=losses.sum() / jnp.maximum(n_steps, 1.0),
+                               steps=n_steps, clients=boundary.sum(),
+                               total_weight=flat_w.sum())
+        return flat_theta, flat_w, metrics
+
+    return round_step

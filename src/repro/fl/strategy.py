@@ -1,0 +1,62 @@
+"""Aggregation strategies (paper §3.3): associative strategies ride the
+partial-aggregation fast path; non-associative ones use the gather path."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import fedmedian, tree_weighted_mean
+
+__all__ = ["Strategy", "FedAvg", "FedMedian"]
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str = "base"
+    associative: bool = True
+
+    def reduce(self, stacked_params, weights, global_params):
+        """Server-side one-shot reduce for the gather path."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class FedAvg(Strategy):
+    name: str = "fedavg"
+    associative: bool = True
+    server_lr: float = 1.0   # 1.0 = plain parameter averaging (McMahan 2017)
+
+    def reduce(self, stacked_params, weights, global_params):
+        mean = tree_weighted_mean(stacked_params, weights)
+        if self.server_lr == 1.0:
+            return mean
+        return jax.tree.map(
+            lambda g, m: (g + self.server_lr * (m - g)).astype(g.dtype),
+            global_params, mean)
+
+
+@dataclass(frozen=True)
+class FedMedian(Strategy):
+    """Coordinate-wise median (robust aggregation; Pillutla et al.) — NOT
+    associative, so Pollen ships all client models to the server (Table 7
+    measures exactly this cost difference vs FedAvg + partial aggregation)."""
+
+    name: str = "fedmedian"
+    associative: bool = False
+
+    def reduce(self, stacked_params, weights, global_params):
+        del weights  # median ignores weights
+        return jax.tree.map(lambda x, g: jnp.median(x, axis=0).astype(g.dtype),
+                            stacked_params, global_params)
+
+
+def strategy_from_name(name: str, **kw) -> Strategy:
+    name = name.lower()
+    if name == "fedavg":
+        return FedAvg(**kw)
+    if name == "fedmedian":
+        return FedMedian(**kw)
+    raise ValueError(f"unknown strategy {name!r}")

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for Pollen's compute hot-spots.
+
+* ``fedavg_accum``   — Eq. 1 streaming partial-aggregation update (one HBM pass)
+* ``flash_attention``— blockwise causal GQA attention (client training/prefill)
+* ``ssd``            — fused chunked Mamba-2 SSD with VMEM-resident state
+* ``rmsnorm``        — fused norm
+
+Each has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd wrappers
+(interpret=True off-TPU).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for the streaming FedAvg partial-aggregation update
+(paper Eq. 1) — the inner loop of Pollen's partial aggregation:
+
+    out = (acc * N + theta * n) / (N + n)        (N+n == 0 -> out = acc)
+
+This op is purely memory-bound: 2 reads + 1 write per element, zero reuse.
+The fused kernel performs the whole update in ONE pass over HBM (XLA's
+unfused version reads/writes intermediates for the two multiplies and the
+divide unless fusion kicks in); on-chip it is a single VMEM-resident FMA per
+tile.  Tiling: the flattened parameter vector is reshaped to (rows, 1024)
+lanes and blocked (block_rows, 1024) — (8, 128)-aligned for the VPU.
+
+Scalars N (old weight) and n (client weight) ride in SMEM via scalar
+prefetch so one compiled kernel serves every call site.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fedavg_accum_2d", "LANES"]
+
+LANES = 1024          # second-minor tile width (8 sublanes x 128 lanes)
+
+
+def _kernel(scal_ref, acc_ref, theta_ref, out_ref):
+    n_old = scal_ref[0]
+    n_k = scal_ref[1]
+    n_new = n_old + n_k
+    denom = jnp.where(n_new > 0, n_new, 1.0)
+    acc = acc_ref[...]
+    th = theta_ref[...].astype(jnp.float32)
+    blended = (acc.astype(jnp.float32) * n_old + th * n_k) / denom
+    out_ref[...] = jnp.where(n_new > 0, blended, acc.astype(jnp.float32)) \
+        .astype(out_ref.dtype)
+
+
+def fedavg_accum_2d(acc, theta, n_old, n_k, *, block_rows: int = 256,
+                    interpret: bool = False):
+    """acc/theta: [rows, LANES] (same dtype); n_old/n_k: f32 scalars."""
+    rows, lanes = acc.shape
+    if lanes != LANES:
+        raise ValueError(f"expected lane dim {LANES}, got {lanes}")
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows {rows} not divisible by block {block_rows}")
+    scal = jnp.stack([jnp.asarray(n_old, jnp.float32),
+                      jnp.asarray(n_k, jnp.float32)])
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        interpret=interpret,
+    )(scal, acc, theta)

@@ -1,0 +1,130 @@
+"""Blockwise causal flash attention (GQA-aware) as a Pallas TPU kernel.
+
+The hot compute of every transformer cell the FL clients train.  Classic
+flash dataflow adapted to the TPU grid model:
+
+  grid = (batch, q_heads, q_blocks, kv_blocks)   — kv innermost.
+
+TPU grids execute sequentially over the innermost dim, so the online-softmax
+running max ``m``, normalizer ``l`` and output accumulator ``acc`` live in
+VMEM scratch and persist across kv steps; the kernel initializes them at
+kv==0 and writes ``acc / l`` at the last kv block.  Causality is exploited
+structurally: kv blocks strictly above the diagonal contribute nothing and
+are skipped via ``pl.when`` (the dominant saving at 32k prefill: 2x).
+
+GQA: the kv-head index for q-head ``h`` is ``h // (Hq // Hkv)`` — encoded in
+the k/v BlockSpec index maps, so no head replication is materialized.
+
+VMEM per step: q (bq, d) + k/v (bk, d) + scores (bq, bk) + acc (bq, d);
+defaults bq=bk=256, d=128 → ~1 MB, comfortably within the ~16 MB budget,
+leaving headroom for double-buffered pipelining of the k/v streams.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_bhsd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal structural skip: kv block strictly above the diagonal
+    q_start = iq * block_q
+    k_start = ik * block_k
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    else:
+        run = ik >= 0          # traced 'always true'
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)              # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                              # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         block_q: int = 256, block_k: int = 256,
+                         interpret: bool = False):
+    """q: [b, hq, s, d]; k, v: [b, hkv, t, d] — returns [b, hq, s, d].
+
+    s and t must be divisible by the block sizes (ops wrapper pads).
+    """
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq {hq} not a multiple of Hkv {hkv}")
+    g = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    if s % block_q or t % block_k:
+        raise ValueError("seq dims must divide block sizes (pad in wrapper)")
+    scale = 1.0 / math.sqrt(d)
+    grid = (b, hq, s // block_q, t // block_k)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda ib, ih, iq, ik: (ib, ih, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, d),
+                           lambda ib, ih, iq, ik: (ib, ih // g, ik, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda ib, ih, iq, ik: (ib, ih, iq, 0))
+
+    kern = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, kv_blocks=t // block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

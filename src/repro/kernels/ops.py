@@ -1,0 +1,124 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These adapt model-layer layouts to kernel layouts (transpose/pad), pick
+block sizes, and fall back to interpret mode off-TPU so the same call sites
+work in tests (CPU), dry-runs, and on real hardware.
+
+    fedavg_accum(acc, theta, n_old, n_k)        — any-shape pytree leaf
+    rmsnorm(x, scale)                           — [..., D]
+    flash_attention(q, k, v, causal=...)        — [b, s, h, d] model layout
+    ssd(x, dt, A_log, B, C, D, chunk=...)       — [b, s, h, p] model layout
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fedavg_accum as _fa
+from repro.kernels import flash_attention as _fl
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd as _ssd
+
+__all__ = ["fedavg_accum", "rmsnorm", "flash_attention", "ssd",
+           "on_tpu", "INTERPRET"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# Tests may flip this; by default interpret unless a real TPU is attached.
+INTERPRET = not on_tpu()
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fedavg_accum(acc, theta, n_old, n_k, *, block_rows: int = 256):
+    """Streaming Eq. 1 update on one pytree leaf of any shape."""
+    shape, dtype = acc.shape, acc.dtype
+    flat_a = acc.reshape(-1)
+    flat_t = theta.astype(dtype).reshape(-1)
+    n = flat_a.size
+    lanes = _fa.LANES
+    rows = max(1, _round_up(n, lanes) // lanes)
+    # pick a block that divides rows
+    block = min(block_rows, rows)
+    while rows % block:
+        block -= 1
+    pad = rows * lanes - n
+    if pad:
+        flat_a = jnp.pad(flat_a, (0, pad))
+        flat_t = jnp.pad(flat_t, (0, pad))
+    out = _fa.fedavg_accum_2d(flat_a.reshape(rows, lanes),
+                              flat_t.reshape(rows, lanes),
+                              n_old, n_k, block_rows=block,
+                              interpret=INTERPRET)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 128):
+    shape = x.shape
+    d = shape[-1]
+    rows = max(1, x.size // d)
+    x2 = x.reshape(rows, d)
+    block = min(block_rows, rows)
+    while rows % block:
+        block -= 1
+    out = _rn.rmsnorm_2d(x2, scale, eps=eps, block_rows=block,
+                         interpret=INTERPRET)
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256):
+    """Model layout [b, s, h, d] in/out; pads s/t to block multiples."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    bq = min(block_q, _round_up(s, 128))
+    bk = min(block_k, _round_up(t, 128))
+    sp = _round_up(s, bq)
+    tp = _round_up(t, bk)
+    qt = jnp.moveaxis(q, 2, 1)                       # [b, h, s, d]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if sp != s:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    if tp != t:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, tp - t), (0, 0)))
+        # padded keys must not attend: causal masking handles the tail when
+        # sp >= tp; for non-causal we mask via a large-negative key trick.
+        if not causal:
+            raise NotImplementedError("non-causal padding unsupported; pad "
+                                      "t to a block multiple upstream")
+    out = _fl.flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=bq,
+                                   block_k=bk, interpret=INTERPRET)
+    return jnp.moveaxis(out[:, :, :s, :], 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A_log, B, C, D, *, chunk: int = 128):
+    """Model layout: x [b,s,h,p]; dt [b,s,h]; B/C [b,s,g,n] in/out [b,s,h,p]."""
+    b, s, h, p = x.shape
+    ck = min(chunk, _round_up(s, 8))
+    sp = _round_up(s, ck)
+    xt = jnp.moveaxis(x, 2, 1)                       # [b,h,s,p]
+    dtt = jnp.moveaxis(dt, 2, 1)                     # [b,h,s]
+    Bt = jnp.moveaxis(B, 2, 1)                       # [b,g,s,n]
+    Ct = jnp.moveaxis(C, 2, 1)
+    if sp != s:
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, sp - s)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+    out = _ssd.ssd_bhsp(xt, dtt, A_log, Bt, Ct, D, chunk=ck,
+                        interpret=INTERPRET)
+    return jnp.moveaxis(out[:, :, :s, :], 1, 2)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately naive: materialize everything, no chunking, no online softmax —
+these define correctness, the kernels define speed.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fedavg_accum_ref", "rmsnorm_ref", "attention_ref", "ssd_ref"]
+
+
+def fedavg_accum_ref(acc, theta, n_old, n_k):
+    """Eq. 1: (acc*N + theta*n)/(N+n); N+n == 0 -> acc unchanged."""
+    n_old = jnp.asarray(n_old, jnp.float32)
+    n_k = jnp.asarray(n_k, jnp.float32)
+    n_new = n_old + n_k
+    denom = jnp.where(n_new > 0, n_new, 1.0)
+    out = (acc.astype(jnp.float32) * n_old
+           + theta.astype(jnp.float32) * n_k) / denom
+    return jnp.where(n_new > 0, out, acc.astype(jnp.float32)).astype(acc.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q [b,hq,s,d]; k,v [b,hkv,t,d] — materialized-softmax GQA oracle."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A_log, B, C, D):
+    """Token-recurrent SSD oracle in the kernel's [b,h,s,p] layout."""
+    b, h, s, p = x.shape
+    g, n = B.shape[1], B.shape[3]
+    hpg = h // g
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    Bh = jnp.repeat(B, hpg, axis=1)                    # [b,h,s,n]
+    Ch = jnp.repeat(C, hpg, axis=1)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp                          # [b,h,p],[b,h],[b,h,n]
+        a = jnp.exp(dtt * A)
+        st = st * a[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, Bt)
+        yt = jnp.einsum("bhpn,bhn->bhp", st, Ct)
+        return st, yt
+
+    xs = (jnp.moveaxis(xf, 2, 0), jnp.moveaxis(dtf, 2, 0),
+          jnp.moveaxis(Bh.astype(jnp.float32), 2, 0),
+          jnp.moveaxis(Ch.astype(jnp.float32), 2, 0))
+    _, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 2)                         # [b,h,s,p]
+    y = y + xf * D.astype(jnp.float32)[None, :, None, None]
+    return y.astype(x.dtype)

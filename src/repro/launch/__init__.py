@@ -1,0 +1,2 @@
+"""Launch stack: mesh construction, per-cell planning, dry-run driver,
+roofline analysis, and the train/serve entry points."""

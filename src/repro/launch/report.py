@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun_v3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_BUDGET = 16 * 2 ** 30
+
+
+def load(d):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if "__" not in os.path.basename(p):
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | plan (W·P·S·b / policy) | bytes/dev "
+             "(args+temp) | fits 16 GiB | HLO GFLOPs/dev | collectives/round |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| skip | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| **FAIL** | — | — |")
+            continue
+        m = r["memory_analysis"]
+        used = m.get("argument_size_in_bytes", 0) + m.get(
+            "temp_size_in_bytes", 0)
+        fits = "yes" if used <= HBM_BUDGET else f"**{used / 2**30:.1f} GiB**"
+        plan = (f"{r['W']}·{r['P']}·{r['S']}·{r['b']} / {r['policy']}"
+                if r["kind"] == "train" else
+                f"b={r['b']} / {r['policy']}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {plan} "
+            f"| {used / 2**30:.2f} GiB | {fits} "
+            f"| {r['flops_per_device'] / 1e9:.0f} "
+            f"| {r['collectives']['count']:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="pod") -> str:
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | MODEL/HLO flops | roofline frac | model frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip "
+                         f"| — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        bound = t["step_lower_bound_s"]
+        model_frac = (r["model_flops_per_device"] / 197e12) / bound \
+            if bound else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} | {t['collective_s']:.3f} "
+            f"| {t['dominant'].replace('_s', '')} "
+            f"| {r['useful_ratio']:.3f} | {t['roofline_fraction']:.4f} "
+            f"| {model_frac:.4f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_v3")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+                    default="both")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run table\n")
+        print(dryrun_table(recs))
+    if args.section in ("roofline", "both"):
+        print("\n### Roofline table (single pod)\n")
+        print(roofline_table(recs, "pod"))
+        print("\n### Roofline table (multi-pod)\n")
+        print(roofline_table(recs, "multipod"))
+
+
+if __name__ == "__main__":
+    main()

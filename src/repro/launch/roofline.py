@@ -1,0 +1,173 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+    collective = wire_bytes_per_device / link_bw              (~50 GB/s ICI)
+
+``cost_analysis()`` of the post-SPMD executable gives per-partition FLOPs and
+bytes.  Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO text and, for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, charge ring-algorithm wire bytes:
+
+    all-gather      out_bytes  × (g-1)/g
+    reduce-scatter  in_bytes   × (g-1)/g
+    all-reduce      2 × bytes  × (g-1)/g     (RS + AG)
+    all-to-all      bytes      × (g-1)/g
+    collective-permute  bytes  × 1
+
+Cross-pod membership (any replica group spanning partition-id blocks of one
+pod) is tallied separately — that traffic rides DCN, not ICI.
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (serve); the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/padding/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["HW", "parse_collectives", "roofline_terms", "model_flops",
+           "CollectiveOp"]
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 / chip
+    hbm_bw: float = 819e9           # bytes/s
+    ici_bw: float = 50e9            # bytes/s/link
+    dcn_bw: float = 12.5e9          # bytes/s cross-pod (assumed)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*"
+    r"((?:\(|)[a-z0-9\[\],{}\s/]*(?:\)|))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
+                       r"u64|c64|c128)\[([0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}|replica_groups=\[")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int            # payload bytes (output tuple total)
+    group_size: int
+    wire_bytes: float     # per-device ring traffic
+    cross_pod: bool
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str, pod_size: int) -> tuple[int, bool]:
+    """(group size, crosses pod) parsed from replica_groups annotation."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        cross = pod_size > 0 and len({i // pod_size for i in ids}) > 1
+        return max(len(ids), 1), cross
+    # iota-style: replica_groups=[8,64]<=[...] — product of dims / count
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        # conservative: assume cross-pod if a group spans more ids than a pod
+        return gsize, pod_size > 0 and gsize > pod_size
+    return 1, False
+
+
+def parse_collectives(hlo_text: str, *, pod_size: int = 0
+                      ) -> list[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).lower()
+        if m.group(4) == "-done":
+            continue                    # counted at -start
+        nbytes = _shape_bytes(m.group(2))
+        if nbytes == 0:                 # fall back: shapes on operand side
+            nbytes = _shape_bytes(line.split("(", 1)[-1])
+        g, cross = _group_info(line, pod_size)
+        if g <= 1:
+            wire = 0.0
+        elif kind == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif kind == "collective-permute":
+            wire = float(nbytes)
+        else:
+            wire = nbytes * (g - 1) / g
+        ops.append(CollectiveOp(kind=kind, bytes=nbytes, group_size=g,
+                                wire_bytes=wire, cross_pod=cross))
+    return ops
+
+
+def collective_summary(ops: list[CollectiveOp]) -> dict:
+    out = {"count": len(ops), "wire_bytes_ici": 0.0, "wire_bytes_dcn": 0.0,
+           "by_kind": {}}
+    for op in ops:
+        key = "wire_bytes_dcn" if op.cross_pod else "wire_bytes_ici"
+        out[key] += op.wire_bytes
+        k = out["by_kind"].setdefault(op.kind, {"count": 0, "wire_bytes": 0.0})
+        k["count"] += 1
+        k["wire_bytes"] += op.wire_bytes
+    return out
+
+
+def model_flops(cfg, tokens: int, kind: str) -> float:
+    """6·N_active·T (train) / 2·N_active·T (serve); MoE experts scaled by
+    top_k/E; embeddings excluded (standard MFU convention)."""
+    import jax
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    n_active = 0.0
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        size = float(np.prod(leaf.shape))
+        if name.endswith(("embed", "lm_head", "pos_embed")):
+            continue
+        if "moe_" in name.rsplit("/", 1)[-1]:
+            size *= cfg.top_k / max(cfg.n_experts, 1)
+        n_active += size
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   wire_ici: float, wire_dcn: float, hw: HW = HW()) -> dict:
+    compute = flops_per_device / hw.peak_flops
+    memory = bytes_per_device / hw.hbm_bw
+    collective = wire_ici / hw.ici_bw + wire_dcn / hw.dcn_bw
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["step_lower_bound_s"] = bound
+    terms["roofline_fraction"] = (compute / bound) if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,89 @@
+"""Step builders: the jittable functions each dry-run/training cell lowers.
+
+* train  → Pollen's federated round (Fig. 5b): W workers × P lanes × S local
+           steps, per-lane streaming partial aggregation (Eq. 1), hierarchical
+           weighted-mean reduce — `fl.round.make_round_step` bound to the
+           arch's loss and the paper's client optimizer (SGD momentum, A.1).
+* prefill → full-prompt forward returning (last logits, populated cache).
+* decode  → one-token serve step against a KV/SSM cache of seq_len.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.fl.round import make_round_step
+from repro.launch.plan import Plan
+from repro.models import decode_step, make_loss_fn, prefill
+from repro.optim.optimizers import sgd
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "build_jitted", "CLIENT_LR", "CLIENT_MOMENTUM"]
+
+# Paper A.1 client optimizer (IC/SR task family); LM archs reuse it — the FL
+# round semantics, not the LM hyperparameters, are what the cell exercises.
+CLIENT_LR = 0.05
+CLIENT_MOMENTUM = 0.9
+
+
+def make_train_step(plan: Plan, *, agg_impl: str = "xla"):
+    cfg = plan.cfg
+    loss = make_loss_fn(cfg)
+    opt = sgd(CLIENT_LR, momentum=CLIENT_MOMENTUM)
+    return make_round_step(loss, opt, agg_impl=agg_impl,
+                           worker_spmd_axes=plan.worker_spmd_axes)
+
+
+def make_prefill_step(plan: Plan):
+    cfg = plan.cfg
+
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_decode_step(plan: Plan):
+    cfg = plan.cfg
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg)
+
+    return serve_step
+
+
+def build_jitted(plan: Plan, shard: dict):
+    """jit with in/out shardings for the plan's kind; returns (fn, args)
+    where args are the ShapeDtypeStruct stand-ins ready for ``.lower``."""
+    from repro.launch.plan import input_specs
+
+    specs = input_specs(plan)
+    if plan.kind == "train":
+        step = make_train_step(plan)
+        jf = jax.jit(
+            step,
+            in_shardings=(shard["params"], shard["batches"], shard["masks"],
+                          shard["masks"], shard["masks"]),
+            out_shardings=(shard["params"], None),
+            donate_argnums=(0,),
+        )
+        args = (shard["params_shapes"], specs["batches"], specs["step_mask"],
+                specs["boundary"], specs["weight"])
+        return jf, args
+    if plan.kind == "prefill":
+        step = make_prefill_step(plan)
+        jf = jax.jit(
+            step,
+            in_shardings=(shard["params"], shard["batch"]),
+            out_shardings=(None, shard["cache"]),
+        )
+        return jf, (shard["params_shapes"], specs["batch"])
+    step = make_decode_step(plan)
+    jf = jax.jit(
+        step,
+        in_shardings=(shard["params"], shard["cache"], shard["tokens"], None),
+        out_shardings=(shard["logits"], shard["cache"]),
+        donate_argnums=(1,),
+    )
+    return jf, (shard["params_shapes"], specs["cache"], specs["tokens"],
+                specs["pos"])

@@ -1,0 +1,35 @@
+"""Model zoo: one unified period-structured LM stack covering all six
+assigned families (dense / moe / vlm / hybrid / audio / ssm), plus the
+paper's four FL-task models (repro.models.papertasks)."""
+
+from repro.models.lm import (decode_step, forward, init_cache, init_params,
+                             layer_plan, loss_fn, param_count, prefill)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "layer_plan", "param_count", "make_loss_fn",
+           "make_batch_spec"]
+
+
+def make_loss_fn(cfg):
+    """Bind the arch config: loss(params, batch) for the FL engine."""
+
+    def _loss(params, batch):
+        return loss_fn(params, batch, cfg)
+
+    return _loss
+
+
+def make_batch_spec(cfg, *, batch: int, seq_len: int):
+    """Host-side shapes/dtypes of one training micro-batch for this arch.
+
+    Mirrors ``launch.plan.input_specs`` but for concrete small batches
+    (smoke tests, the FL engine's synthetic federated data)."""
+    import numpy as np
+
+    spec = {"tokens": ((batch, seq_len), np.int32)}
+    if cfg.frontend == "patch":
+        spec["patch_embed"] = ((batch, cfg.frontend_len,
+                                cfg.resolved_frontend_dim), np.float32)
+    if cfg.frontend == "audio":
+        spec["frames"] = ((batch, cfg.frontend_len, cfg.d_model), np.float32)
+    return spec

@@ -1,0 +1,309 @@
+"""Mamba-2 SSD (state-space duality) sequence mixer.
+
+Three execution paths, all numerically interchangeable (tested against each
+other):
+
+* :func:`ssd_recurrent`  — token-by-token linear recurrence (the decode path
+  and the correctness oracle for tiny shapes);
+* :func:`ssd_chunked`    — the chunked SSD algorithm (Dao & Gu 2024): split
+  the sequence into chunks of Q tokens, compute the intra-chunk part as a
+  masked-decay attention-like matmul (MXU-friendly) and carry inter-chunk
+  states with a ``lax.scan`` — O(S·Q) instead of O(S²), sub-quadratic as the
+  ``long_500k`` shape requires;
+* ``impl='pallas'``      — the intra-chunk matmuls as a Pallas TPU kernel
+  (``repro.kernels.ssd``), chunk loop in-kernel with the state in VMEM.
+
+Layout conventions (b=batch, s=seq, h=heads, p=head_dim, g=B/C groups,
+n=state dim):
+
+    x  [b, s, h, p]     dt [b, s, h]      A_log [h]  (A = -exp(A_log) < 0)
+    B  [b, s, g, n]     C  [b, s, g, n]   D [h]
+    state [b, h, p, n]
+
+The mixer (:func:`mamba2_mixer`) adds the in/out projections, the causal
+depthwise conv over (x,B,C), the dt softplus, and the gated RMSNorm, matching
+the Mamba-2 block; :func:`mamba2_decode_step` is the single-token path that
+carries ``(conv_state, ssm_state)`` — the attention-free KV-cache analogue.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ssd_recurrent", "ssd_chunked", "ssd_decode_step",
+    "mamba2_mixer", "mamba2_decode_step", "MambaCache",
+    "mamba_param_shapes",
+]
+
+
+def _heads_to_groups(h: int, g: int) -> int:
+    if h % g:
+        raise ValueError(f"heads {h} not divisible by groups {g}")
+    return h // g
+
+
+# ---------------------------------------------------------------------------
+# core SSD
+# ---------------------------------------------------------------------------
+def ssd_recurrent(x, dt, A_log, B, C, D, *, state=None):
+    """Token-by-token oracle: y[t] = C[t]·h[t] + D*x[t],
+    h[t] = exp(dt[t]*A)*h[t-1] + dt[t]*x[t]⊗B[t].  Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = _heads_to_groups(h, g)
+    A = -jnp.exp(A_log.astype(jnp.float32))                    # [h]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    Bh = jnp.repeat(B, hpg, axis=2)                            # [b,s,h,n]
+    Ch = jnp.repeat(C, hpg, axis=2)
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp                                  # [b,h,p],[b,h],[b,h,n]x2
+        a = jnp.exp(dtt.astype(jnp.float32) * A)               # [b,h]
+        st = (st * a[..., None, None]
+              + dtt.astype(jnp.float32)[..., None, None]
+              * jnp.einsum("bhp,bhn->bhpn", xt.astype(jnp.float32),
+                           Bt.astype(jnp.float32)))
+        yt = jnp.einsum("bhpn,bhn->bhp", st, Ct.astype(jnp.float32))
+        return st, yt
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                 # [b,s,h,p]
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int = 128, state=None,
+                return_state: bool = False):
+    """Chunked SSD (Mamba-2 Algorithm; 'state-space duality').
+
+    Complexity O(b·s·h·(Q·p + p·n)) — linear in s for fixed chunk Q.  The
+    intra-chunk term is an attention-like masked matmul (runs on the MXU);
+    the inter-chunk term is a length-s/Q ``lax.scan`` over [b,h,p,n] states.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = _heads_to_groups(h, g)
+    Q = min(chunk, s)
+    if s % Q:
+        pad = Q - s % Q
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x, dt, B, C = zf(x), zf(dt), zf(B), zf(C)
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nc = s_pad // Q
+
+    A = -jnp.exp(A_log.astype(jnp.float32))                     # [h]
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, h)
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, h, p)
+    Bf = B.astype(jnp.float32).reshape(b, nc, Q, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, Q, g, n)
+
+    xbar = xf * dtf[..., None]                                  # dt-weighted input
+    la = jnp.cumsum(dtf * A, axis=2)                            # [b,nc,Q,h] log decay
+    la_last = la[:, :, -1]                                      # [b,nc,h]
+
+    # ---- intra-chunk: masked-decay "attention" ------------------------------
+    # scores[i,j] = (C_i · B_j) * exp(la_i - la_j) for j <= i
+    Bh = jnp.repeat(Bf, hpg, axis=3)                            # [b,nc,Q,h,n]
+    Ch = jnp.repeat(Cf, hpg, axis=3)
+    cb = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)               # [b,nc,h,Q,Q]
+    ldec = la[..., :, None, :] - la[..., None, :, :]            # [b,nc,Q,Q,h] (i,j)
+    ldec = jnp.moveaxis(ldec, -1, 2)                            # [b,nc,h,Q,Q]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, ldec, 0.0)), 0.0)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", cb * decay, xbar)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------------
+    # S_c = sum_j exp(la_last - la_j) * B_j ⊗ xbar_j    -> [b,nc,h,p,n]
+    sdec = jnp.exp(la_last[:, :, None, :] - la)                 # [b,nc,Q,h]
+    S_c = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", sdec, Bh, xbar)
+    chunk_decay = jnp.exp(la_last)                              # [b,nc,h]
+
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def carry_fn(st, inp):
+        s_c, dec = inp                                          # [b,h,p,n],[b,h]
+        prev = st
+        st = st * dec[..., None, None] + s_c
+        return st, prev
+
+    (state, prev_states) = jax.lax.scan(
+        carry_fn, state, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # [b,nc,h,p,n]
+
+    # ---- inter-chunk output: y_inter[i] = exp(la_i) * C_i · H_{c-1} ---------
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch, prev_states) \
+        * jnp.exp(la)[..., None]
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    y = y + x.astype(jnp.float32).reshape(b, s_pad, h, p)[:, :s] \
+        * D.astype(jnp.float32)[None, None, :, None]
+    if return_state:
+        return y.astype(x.dtype), state
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_t, A_log, B_t, C_t, D):
+    """One-token state update (the long_500k/decode path).
+
+    state [b,h,p,n]; x_t [b,h,p]; dt_t [b,h]; B_t/C_t [b,g,n].
+    Returns (y_t [b,h,p], new_state).
+    """
+    b, h, p = x_t.shape
+    g, n = B_t.shape[1], B_t.shape[2]
+    hpg = _heads_to_groups(h, g)
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = jnp.exp(dt_t.astype(jnp.float32) * A)                   # [b,h]
+    Bh = jnp.repeat(B_t, hpg, axis=1).astype(jnp.float32)       # [b,h,n]
+    Ch = jnp.repeat(C_t, hpg, axis=1).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t.astype(jnp.float32),
+                     x_t.astype(jnp.float32), Bh)
+    state = state * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + x_t.astype(jnp.float32) * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# the full Mamba-2 mixer (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # [b, k-1, conv_dim] rolling window of pre-conv inputs
+    ssm: jnp.ndarray    # [b, h, p, n]
+
+
+def mamba_param_shapes(d_model: int, *, d_inner: int, head_dim: int,
+                       n_groups: int, d_state: int, conv_k: int):
+    """Leaf name -> shape for one mamba layer (stacked by the caller)."""
+    h = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        "mamba_norm": (d_model,),
+        "mamba_in": (d_model, 2 * d_inner + 2 * n_groups * d_state + h),
+        "mamba_conv": (conv_k, conv_dim),
+        "mamba_A": (h,),
+        "mamba_dt_bias": (h,),
+        "mamba_D": (h,),
+        "mamba_gnorm": (d_inner,),
+        "mamba_out": (d_inner, d_model),
+    }
+
+
+def _split_in_proj(proj, d_inner, n_groups, d_state, h):
+    zs = d_inner
+    xbc = d_inner + 2 * n_groups * d_state
+    z, xBC, dt = jnp.split(proj, [zs, zs + xbc], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w):
+    """Depthwise causal conv1d: xBC [b,s,c], w [k,c] -> [b,s,c]."""
+    k = w.shape[0]
+    xp = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    # depthwise: conv via sum of shifted scales (k is tiny, typically 4)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out)
+
+
+def mamba2_mixer(p, x, *, head_dim: int, n_groups: int, d_state: int,
+                 chunk: int = 128, impl: str = "chunked",
+                 return_state: bool = False):
+    """Full Mamba-2 block body (pre-norm residual added by the caller).
+
+    p: dict with keys from :func:`mamba_param_shapes`; x [b,s,D].
+    With ``return_state`` also returns ``(conv_tail, ssm_state)`` so prefill
+    can seed the decode cache.
+    """
+    b, s, D = x.shape
+    d_inner = p["mamba_out"].shape[0]
+    h = d_inner // head_dim
+    proj = x @ p["mamba_in"]                                   # [b,s,2di+2gn+h]
+    z, xBC_pre, dt = _split_in_proj(proj, d_inner, n_groups, d_state, h)
+    xBC = _causal_conv(xBC_pre, p["mamba_conv"])
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + n_groups * d_state], axis=-1)
+    xs = xs.reshape(b, s, h, head_dim)
+    B = B.reshape(b, s, n_groups, d_state)
+    C = C.reshape(b, s, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["mamba_dt_bias"].astype(jnp.float32))
+    state = None
+    if impl == "recurrent":
+        y, state = ssd_recurrent(xs, dt, p["mamba_A"], B, C, p["mamba_D"])
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        y = kops.ssd(xs, dt, p["mamba_A"], B, C, p["mamba_D"], chunk=chunk)
+        if return_state:
+            _, state = ssd_chunked(xs, dt, p["mamba_A"], B, C, p["mamba_D"],
+                                   chunk=chunk, return_state=True)
+    else:
+        y, state = ssd_chunked(xs, dt, p["mamba_A"], B, C, p["mamba_D"],
+                               chunk=chunk, return_state=True)
+    y = y.reshape(b, s, d_inner)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z)) * scale
+    yg = y * jax.nn.silu(z)
+    yf = yg.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = (yf * jax.lax.rsqrt(var + 1e-6)
+          * p["mamba_gnorm"].astype(jnp.float32)).astype(x.dtype)
+    out = yn @ p["mamba_out"]
+    if return_state:
+        k = p["mamba_conv"].shape[0]
+        # rolling conv window tail: last (k-1) *pre-conv* rows, zero-padded on
+        # the left for sequences shorter than the window.
+        tail = jnp.pad(xBC_pre, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):, :]
+        return out, (tail.astype(x.dtype), state)
+    return out
+
+
+def mamba2_init_cache(batch: int, *, d_inner: int, head_dim: int,
+                      n_groups: int, d_state: int, conv_k: int,
+                      dtype=jnp.bfloat16) -> MambaCache:
+    h = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return MambaCache(
+        conv=jnp.zeros((batch, conv_k - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, h, head_dim, d_state), jnp.float32))
+
+
+def mamba2_decode_step(p, x_t, cache: MambaCache, *, head_dim: int,
+                       n_groups: int, d_state: int):
+    """One-token mixer step.  x_t [b,D]; returns (y_t [b,D], new_cache)."""
+    b, D = x_t.shape
+    d_inner = p["mamba_out"].shape[0]
+    h = d_inner // head_dim
+    proj = x_t @ p["mamba_in"]
+    z, xBC, dt = _split_in_proj(proj, d_inner, n_groups, d_state, h)
+    # rolling conv window: [b, k-1, c] + current -> conv output for this token
+    w = p["mamba_conv"]                                        # [k, c]
+    k = w.shape[0]
+    window = jnp.concatenate([cache.conv, xBC[:, None, :]], axis=1)  # [b,k,c]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                                      w.astype(jnp.float32))).astype(x_t.dtype)
+    new_conv = window[:, 1:, :]
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + n_groups * d_state],
+                         axis=-1)
+    xs = xs.reshape(b, h, head_dim)
+    B = B.reshape(b, n_groups, d_state)
+    C = C.reshape(b, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["mamba_dt_bias"].astype(jnp.float32))
+    y, new_ssm = ssd_decode_step(cache.ssm, xs, dt, p["mamba_A"], B, C,
+                                 p["mamba_D"])
+    y = y.reshape(b, d_inner)
+    yg = y * jax.nn.silu(z)
+    yf = yg.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = (yf * jax.lax.rsqrt(var + 1e-6)
+          * p["mamba_gnorm"].astype(jnp.float32)).astype(x_t.dtype)
+    return yn @ p["mamba_out"], MambaCache(conv=new_conv, ssm=new_ssm)

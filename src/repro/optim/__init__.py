@@ -1,0 +1,11 @@
+from .optimizers import (
+    Optimizer,
+    sgd,
+    adam,
+    adamw,
+    make_optimizer,
+    clip_by_global_norm,
+)
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "make_optimizer",
+           "clip_by_global_norm"]

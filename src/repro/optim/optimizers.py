@@ -1,0 +1,118 @@
+"""Minimal self-contained optimizers (no optax in this environment).
+
+The paper's clients use SGD with momentum + weight decay (IC/SR/TG, A.1) and
+Adam (MLM, A.1); the server-side aggregation is plain FedAvg, but we also
+expose AdamW for the LM architectures' centralized smoke training.
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  Everything is pytree-polymorphic and jit/scan-safe.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "make_optimizer",
+           "apply_updates", "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    """SGD + momentum + (decoupled) weight decay — paper A.1 client optimizer."""
+
+    def init(params):
+        if momentum == 0.0:
+            return SGDState(momentum=())
+        return SGDState(momentum=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                                 grads, params)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+        updates = jax.tree.map(lambda m: -lr * m, new_m)
+        return updates, SGDState(momentum=new_m)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamState(NamedTuple):
+    step: Any
+    mu: Any
+    nu: Any
+
+
+def _adam(lr, b1, b2, eps, weight_decay, decoupled) -> Optimizer:
+    def init(params):
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                         nu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params):
+        if weight_decay and not decoupled:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                                 grads, params)
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and decoupled:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    return _adam(lr, b1, b2, eps, weight_decay, decoupled=False)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam(lr, b1, b2, eps, weight_decay, decoupled=True)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    name = name.lower()
+    if name == "sgd":
+        return sgd(**kw)
+    if name == "adam":
+        return adam(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

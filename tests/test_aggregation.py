@@ -1,0 +1,107 @@
+"""Partial-aggregation algebra (paper Eq. 1/2, §3.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (fedavg_flat, fedmedian, fold_clients,
+                                    partial_init, partial_merge,
+                                    partial_update, tree_weighted_mean)
+
+
+def _tree(key, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": jax.random.normal(k1, (4, 8)) * scale,
+            "b": jax.random.normal(k2, (8,)) * scale,
+            "nested": {"v": jax.random.normal(k3, (3, 3, 2)) * scale}}
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 100))
+def test_streaming_equals_flat_fedavg(n, seed):
+    """Folding clients one by one (Eq. 1) == one-shot weighted average."""
+    key = jax.random.key(seed)
+    trees = [_tree(jax.random.fold_in(key, i)) for i in range(n)]
+    weights = np.abs(np.random.default_rng(seed).normal(5, 2, n)) + 0.1
+    partial = partial_init(trees[0])
+    for t, w in zip(trees, weights):
+        partial = partial_update(partial, t, w)
+    flat = fedavg_flat(trees, weights)
+    for a, b in zip(jax.tree.leaves(partial.theta), jax.tree.leaves(flat)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(split=st.integers(1, 5), seed=st.integers(0, 50))
+def test_merge_associativity(split, seed):
+    """Node-level combine: merge(fold(A), fold(B)) == fold(A+B) — the
+    property that makes hierarchical aggregation exact (paper A.3)."""
+    n = 6
+    key = jax.random.key(seed)
+    trees = [_tree(jax.random.fold_in(key, i)) for i in range(n)]
+    weights = list(np.arange(1.0, n + 1))
+    split = min(split, n - 1)
+    pa = partial_init(trees[0])
+    for t, w in zip(trees[:split], weights[:split]):
+        pa = partial_update(pa, t, w)
+    pb = partial_init(trees[0])
+    for t, w in zip(trees[split:], weights[split:]):
+        pb = partial_update(pb, t, w)
+    merged = partial_merge(pa, pb)
+    flat = fedavg_flat(trees, weights)
+    for a, b in zip(jax.tree.leaves(merged.theta), jax.tree.leaves(flat)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_weight_is_noop():
+    """Padded client slots (w=0) must not change the partial — the masked
+    no-op the TPU round step relies on."""
+    key = jax.random.key(0)
+    t1, t2 = _tree(key), _tree(jax.random.fold_in(key, 1))
+    p = partial_init(t1)
+    p = partial_update(p, t1, 3.0)
+    q = partial_update(p, t2, 0.0)
+    for a, b in zip(jax.tree.leaves(p.theta), jax.tree.leaves(q.theta)):
+        np.testing.assert_array_equal(a, b)
+    assert float(q.weight) == 3.0
+
+
+def test_fold_clients_scan_matches_flat():
+    key = jax.random.key(3)
+    trees = [_tree(jax.random.fold_in(key, i)) for i in range(5)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    w = jnp.array([1.0, 2.0, 0.0, 3.0, 0.5])  # includes a padded slot
+    folded, total = fold_clients(_tree(key), stacked, w)
+    flat = fedavg_flat([t for t, wi in zip(trees, w) if wi > 0],
+                       [float(wi) for wi in w if wi > 0])
+    for a, b in zip(jax.tree.leaves(folded), jax.tree.leaves(flat)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+    assert float(total) == pytest.approx(6.5)
+
+
+def test_fedmedian_is_coordinatewise():
+    trees = [{"w": jnp.full((2, 2), v)} for v in (1.0, 5.0, 100.0)]
+    med = fedmedian(trees)
+    np.testing.assert_array_equal(med["w"], jnp.full((2, 2), 5.0))
+
+
+def test_tree_weighted_mean_matches_numpy():
+    key = jax.random.key(9)
+    stacked = {"w": jax.random.normal(key, (6, 3, 2))}
+    w = jnp.array([1.0, 0.5, 2.0, 0.0, 1.5, 3.0])
+    out = tree_weighted_mean(stacked, w)
+    expect = np.average(np.asarray(stacked["w"]), axis=0,
+                        weights=np.asarray(w))
+    np.testing.assert_allclose(out["w"], expect, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_partial_update_matches_xla():
+    key = jax.random.key(11)
+    t1, t2 = _tree(key), _tree(jax.random.fold_in(key, 1))
+    p0 = partial_init(t1)
+    p_x = partial_update(partial_update(p0, t1, 2.0), t2, 5.0, impl="xla")
+    p_p = partial_update(partial_update(p0, t1, 2.0), t2, 5.0, impl="pallas")
+    for a, b in zip(jax.tree.leaves(p_x.theta), jax.tree.leaves(p_p.theta)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

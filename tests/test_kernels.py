@@ -1,0 +1,133 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True
+on CPU; the same call sites run compiled on TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fedavg_accum
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(7,), (33,), (300, 5), (129, 1025),
+                                   (2, 3, 5, 7), (4096,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_accum_shapes_dtypes(shape, dtype):
+    a = jax.random.normal(jax.random.fold_in(KEY, 1), shape, dtype)
+    t = jax.random.normal(jax.random.fold_in(KEY, 2), shape, dtype)
+    out = ops.fedavg_accum(a, t, 10.0, 3.0)
+    want = ref.fedavg_accum_ref(a, t, 10.0, 3.0)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+    assert out.shape == shape and out.dtype == dtype
+
+
+@pytest.mark.parametrize("n_old,n_k", [(0.0, 0.0), (0.0, 4.0), (7.0, 0.0)])
+def test_fedavg_accum_weight_edges(n_old, n_k):
+    a = jax.random.normal(KEY, (50,))
+    t = a * 3.0 + 1.0
+    out = ops.fedavg_accum(a, t, n_old, n_k)
+    want = ref.fedavg_accum_ref(a, t, n_old, n_k)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 64), (2, 3, 128), (5, 256), (1, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_shapes_dtypes(shape, dtype):
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), shape, dtype)
+    s = jax.random.normal(jax.random.fold_in(KEY, 4), shape[-1:], jnp.float32)
+    out = ops.rmsnorm(x, s)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,hq,hkv,d,bq,bk", [
+    (2, 128, 4, 2, 32, 64, 64),     # GQA
+    (1, 100, 8, 8, 16, 64, 64),     # MHA + ragged seq (padding path)
+    (2, 260, 6, 2, 64, 128, 128),   # ragged + GQA g=3
+    (1, 512, 2, 1, 128, 256, 256),  # hardware-aligned blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, hq, hkv, d, bq, bk, dtype):
+    q = jax.random.normal(jax.random.fold_in(KEY, 5), (b, s, hq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 6), (b, s, hkv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 7), (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.attention_ref(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                             jnp.moveaxis(v, 2, 1), causal=True)
+    want = jnp.moveaxis(want, 1, 2)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32),
+                               **(_tol(dtype) if dtype == jnp.bfloat16
+                                  else dict(rtol=2e-5, atol=2e-5)))
+
+
+def test_flash_matches_model_layer():
+    """The kernel is a drop-in for the model's attention impl."""
+    from repro.models.layers import gqa_attention
+    q = jax.random.normal(jax.random.fold_in(KEY, 8), (2, 128, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 9), (2, 128, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 10), (2, 128, 2, 32))
+    dense = gqa_attention(q, k, v, causal=True, impl="dense")
+    pallas = gqa_attention(q, k, v, causal=True, impl="pallas")
+    np.testing.assert_allclose(pallas, dense, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,p,g,n,ck", [
+    (2, 64, 4, 16, 2, 32, 16),
+    (1, 100, 8, 32, 1, 64, 32),     # ragged seq
+    (2, 128, 4, 64, 4, 16, 128),    # chunk == seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(b, s, h, p, g, n, ck, dtype):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(dtype)
+    A_log = jax.random.normal(ks[2], (h,)) * 0.3
+    B = (jax.random.normal(ks[3], (b, s, g, n)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (b, s, g, n)) * 0.5).astype(dtype)
+    D = jax.random.normal(ks[5], (h,)) * 0.1
+    out = ops.ssd(x, dt, A_log, B, C, D, chunk=ck)
+    want = ref.ssd_ref(jnp.moveaxis(x, 2, 1), jnp.moveaxis(dt, 2, 1), A_log,
+                       jnp.moveaxis(B, 2, 1), jnp.moveaxis(C, 2, 1), D)
+    want = jnp.moveaxis(want, 1, 2)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **tol)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """Pallas SSD == the model's pure-JAX chunked SSD on the model layout."""
+    from repro.models.ssd import ssd_chunked
+    ks = jax.random.split(KEY, 6)
+    b, s, h, p, g, n = 2, 96, 4, 32, 2, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = jax.random.normal(ks[2], (h,)) * 0.3
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jax.random.normal(ks[5], (h,)) * 0.1
+    want = ssd_chunked(x, dt, A_log, B, C, D, chunk=32)
+    out = ops.ssd(x, dt, A_log, B, C, D, chunk=32)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)

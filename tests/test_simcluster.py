@@ -1,0 +1,139 @@
+"""Cluster-simulator behaviour: the paper's structural claims must hold."""
+
+import numpy as np
+import pytest
+
+from repro.data import make_federated_dataset
+from repro.simcluster import (TASKS, multi_node, run_experiment, single_node)
+from repro.simcluster.engine import agg_time, client_time, make_workers
+from repro.simcluster.profiles import AGG_RATE_FEDAVG, AGG_RATE_FEDMEDIAN
+
+
+def _sampler(task="ic", cohort=60, seed=7):
+    ds = make_federated_dataset(task)
+    rng = np.random.default_rng(seed)
+    return lambda r: [ds.n_batches(int(c))
+                      for c in rng.choice(ds.n_clients, size=cohort)]
+
+
+def test_table3_concurrency_expansion():
+    """Table 3: per-GPU-type worker counts."""
+    ws = make_workers(multi_node(), TASKS["ic"])
+    by_type = {}
+    for w in ws:
+        by_type[w.gpu_type] = by_type.get(w.gpu_type, 0) + 1
+    assert by_type == {"a40": 14, "2080ti": 3 * 4}
+
+
+def test_one_worker_per_gpu_flute_parrot():
+    ws = make_workers(multi_node(), TASKS["ic"], one_worker_per_gpu=True)
+    assert len(ws) == 4
+
+
+def test_flower_uniform_concurrency_uses_least_capable():
+    """§2.5: Flower forces one concurrency level — the least capable GPU."""
+    ws = make_workers(multi_node(), TASKS["ic"], uniform_concurrency=True)
+    per_gpu = {}
+    for w in ws:
+        per_gpu.setdefault(w.gpu_idx, 0)
+        per_gpu[w.gpu_idx] += 1
+    assert set(per_gpu.values()) == {4}       # 2080 Ti's level everywhere
+
+
+def test_client_time_monotone_in_batches_and_concurrency():
+    rng = np.random.default_rng(0)
+    t = TASKS["ic"]
+    small = np.mean([client_time(rng, t, "a40", 5, 1) for _ in range(200)])
+    big = np.mean([client_time(rng, t, "a40", 500, 1) for _ in range(200)])
+    assert big > small
+    solo = np.mean([client_time(rng, t, "a40", 50, 1) for _ in range(200)])
+    shared = np.mean([client_time(rng, t, "a40", 50, 8) for _ in range(200)])
+    assert shared > solo                      # Fig. 3: per-client slowdown
+    # ... but total throughput still wins with concurrency
+    assert shared / solo < 8
+
+
+def test_gpus_differ_fig4():
+    rng = np.random.default_rng(0)
+    t = TASKS["ic"]
+    a40 = np.mean([client_time(rng, t, "a40", 100, 1) for _ in range(100)])
+    ti = np.mean([client_time(rng, t, "2080ti", 100, 1) for _ in range(100)])
+    assert ti > 1.8 * a40
+
+
+def test_pollen_beats_pull_frameworks_multinode():
+    """Fig. 9: Pollen outperforms on heterogeneous multi-node clusters."""
+    t = TASKS["ic"]
+    res = {fw: run_experiment(fw, t, multi_node(), _sampler(), rounds=8)
+           for fw in ("pollen", "flower", "fedscale", "flute", "parrot")}
+    pol = res["pollen"].total_time
+    for fw in ("flower", "fedscale", "flute", "parrot"):
+        assert res[fw].total_time > pol, fw
+
+
+def test_gap_grows_with_scale():
+    """Figs. 11-13: Pollen's advantage compounds with cohort size (pull
+    frameworks pay per-client communication)."""
+    t = TASKS["ic"]
+    gaps = []
+    for cohort in (50, 400):
+        pol = run_experiment("pollen", t, multi_node(),
+                             _sampler(cohort=cohort), rounds=5)
+        flo = run_experiment("flower", t, multi_node(),
+                             _sampler(cohort=cohort), rounds=5)
+        gaps.append(flo.mean_round_time - pol.mean_round_time)
+    assert gaps[1] > gaps[0]
+
+
+def test_lb_idle_reduction_table2():
+    """Table 2: LB placement cuts idle time 25-50% vs RR/BB at scale."""
+    t = TASKS["ic"]
+    idle = {}
+    for fw in ("pollen", "pollen_rr", "pollen_bb"):
+        r = run_experiment(fw, t, multi_node(), _sampler(cohort=400, seed=3),
+                           rounds=10)
+        idle[fw] = float(np.mean([s.idle_time for s in r.rounds[3:]]))
+    assert idle["pollen"] < 0.8 * idle["pollen_rr"]
+    assert idle["pollen"] < 0.8 * idle["pollen_bb"]
+
+
+def test_fedscale_fails_very_large_cohort():
+    """Fig. 11 asterisks: FedScale cannot aggregate very large cohorts."""
+    t = TASKS["ic"]
+    with pytest.raises(RuntimeError):
+        run_experiment("fedscale", t, multi_node(),
+                       _sampler(cohort=10_000), rounds=1)
+
+
+def test_aggregation_scaling_tables_6_7():
+    """Aggregation cost linear in models × size; FedMedian ≈ 6× FedAvg."""
+    b = TASKS["ic"].model_bytes
+    assert agg_time(1000, b) == pytest.approx(10 * agg_time(100, b))
+    assert agg_time(100, b, AGG_RATE_FEDMEDIAN) > 4 * agg_time(
+        100, b, AGG_RATE_FEDAVG)
+
+
+def test_partial_aggregation_constant_upload():
+    """A.3: with partial aggregation the node→server traffic is constant in
+    cohort size; without it, linear."""
+    import numpy as np
+    from repro.simcluster.engine import simulate_push_round
+    rng = np.random.default_rng(0)
+    t = TASKS["ic"]
+    ws = make_workers(single_node(), t)
+    for n in (40, 400):
+        a = simulate_push_round(rng, t, ws,
+                                {ws[0].wid: [5] * n}, partial_agg=True)
+        assert a.bytes_moved == 2 * t.model_bytes      # 1 down + 1 up
+    b = simulate_push_round(rng, t, ws, {ws[0].wid: [5] * 40},
+                            partial_agg=False)
+    assert b.bytes_moved > 2 * t.model_bytes
+
+
+def test_utilization_model_table4():
+    """Pollen's concurrency → high GPU util; 1-worker frameworks → low."""
+    t = TASKS["ic"]
+    pol = run_experiment("pollen", t, single_node(), _sampler(), rounds=4)
+    flu = run_experiment("flute", t, single_node(), _sampler(), rounds=4)
+    assert pol.mean_utilization > 2 * flu.mean_utilization
+    assert 0 < pol.mean_utilization <= 0.98

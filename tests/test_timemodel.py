@@ -1,0 +1,114 @@
+"""Eq. 3 / Eq. 4 time-model tests (unit + property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.timemodel import (TrainingTimeModel, fit_linear,
+                                  fit_log_linear)
+
+
+def _synth(a, b, c, d, n=200, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(1, 500, size=n).astype(np.float64)
+    t = a * x + b * np.log(c * x) + d
+    if noise:
+        t = t * rng.lognormal(0.0, noise, size=n)
+    return x, np.maximum(t, 1e-3)
+
+
+def test_fit_recovers_noiseless_curve():
+    x, t = _synth(0.05, 0.8, 0.5, 1.2)
+    fit = fit_log_linear(x, t)
+    pred = fit.predict(x)
+    assert np.allclose(pred, t, rtol=1e-4, atol=1e-4)
+    assert fit.sse < 1e-4
+
+
+def test_loglinear_beats_linear_on_log_data():
+    """Paper Fig. 7: the log-linear family fits the skewed empirical curve
+    with lower SSE than a plain line."""
+    x, t = _synth(0.01, 3.0, 1.0, 0.5, noise=0.02)
+    ll = fit_log_linear(x, t)
+    lin = fit_linear(x, t)
+    assert ll.sse < lin.sse
+
+
+def test_loglinear_matches_linear_data():
+    """§4.2.1: 'the log-linear curve can always fit linear behavior'."""
+    rng = np.random.default_rng(1)
+    x = rng.integers(1, 300, 150).astype(float)
+    t = 0.2 * x + 3.0
+    ll = fit_log_linear(x, t)
+    assert np.allclose(ll.predict(x), t, rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=st.floats(0.001, 0.5), b=st.floats(0.05, 3.0),
+       d=st.floats(0.0, 5.0), noise=st.floats(0.0, 0.3),
+       seed=st.integers(0, 1000))
+def test_predictions_never_negative(a, b, d, noise, seed):
+    """§4.2.1: the fitted function never predicts negative time."""
+    x, t = _synth(a, b, 1.0, d, noise=noise, seed=seed)
+    fit = fit_log_linear(x, t)
+    grid = np.arange(1, 2000, dtype=np.float64)
+    assert np.all(fit.predict(grid) > 0)
+
+
+def test_degenerate_inputs():
+    fit = fit_log_linear([5.0], [2.0])
+    assert fit.predict(10.0) > 0
+    lin = fit_linear([], [])
+    assert lin.predict(3.0) > 0
+    with pytest.raises(ValueError):
+        fit_log_linear([0.0, 1.0, 2.0], [1.0, 1.0, 1.0])
+
+
+def test_round_protocol_uses_t_minus_2():
+    """§4.2: the fit for round t only uses telemetry from rounds <= t-2."""
+    m = TrainingTimeModel()
+    # poison rounds >= 1 with garbage; clean data in round 0
+    x, t = _synth(0.05, 0.8, 0.5, 1.2, n=100)
+    m.observe(0, x, t)
+    m.observe(1, x, t * 100.0)
+    m.refit(2)          # may use rounds <= 0 only
+    assert m.ready
+    pred = m.predict(50.0)
+    truth = 0.05 * 50 + 0.8 * np.log(0.5 * 50) + 1.2
+    assert pred < truth * 10  # the x100 round must not have been used
+
+
+def test_not_ready_before_data():
+    m = TrainingTimeModel()
+    assert not m.ready
+    with pytest.raises(RuntimeError):
+        m.predict(10)
+    m.observe(0, [1, 2, 3], [1.0, 1.1, 1.2])
+    m.refit(1)          # cutoff = -1: nothing usable yet
+    assert not m.ready
+
+
+def test_adaptive_correction_blends_recent():
+    """Eq. 4: g(x) = 1/2 (f(x) + recent mean at x)."""
+    m = TrainingTimeModel()
+    x, t = _synth(0.05, 0.8, 0.5, 1.2, n=300)
+    m.observe(0, x, t)
+    m.observe(1, x, t)
+    # round 3 sees a 2x system slowdown in the recent window (round 1)
+    m2 = TrainingTimeModel()
+    m2.observe(0, x, t)
+    m2.observe(1, x, t * 2.0)
+    m.refit(3)
+    m2.refit(3)
+    p1 = m.predict(100.0)
+    p2 = m2.predict(100.0)
+    # the correction must move the prediction toward the slowdown, halfway
+    assert p2 > p1 * 1.3
+    assert p2 < p1 * 2.0
+
+
+def test_max_points_retention():
+    m = TrainingTimeModel(max_points=50)
+    for r in range(10):
+        m.observe(r, np.arange(1, 21), np.arange(1, 21, dtype=float))
+    assert m.n_points == 50
