@@ -1,0 +1,179 @@
+"""Host data-path benchmark: vectorized packing + pipelined rounds.
+
+Scoreboard for the pipelined-round-execution PR (the host side of the
+paper's idle-time argument applied to the simulator itself):
+
+* **pack**: per-round host time to build `[W, P, S, ...]` arrays for the
+  largest `bench_scalability`-style cohort — the old per-batch loop packer
+  plus the engine's former post-hoc S-bucket ``np.pad`` recopy, vs the
+  vectorized packer that allocates at the bucketed size and reuses buffers
+  (acceptance: >= 2x).
+* **engine**: end-to-end rounds with ``pipeline_depth`` 0 vs 1 — wall time
+  per round, fraction of the pack hidden under device execution, and the
+  compile-cache recompile count.
+
+Emits machine-readable JSON (default ``BENCH_pipeline.json`` at the repo
+root, override with ``POLLEN_BENCH_OUT``) so future PRs get a perf
+trajectory.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+
+__all__ = ["run"]
+
+
+def _pack_comparison(*, cohort: int, workers: int, rounds: int) -> dict:
+    from repro.core import s_bucket
+    from repro.core.placement import Assignment, ClientInfo, WorkerInfo
+    from repro.data import make_federated_dataset
+    from repro.data.batching import (PackBuffers, build_round_arrays,
+                                     build_round_arrays_loop)
+
+    ds = make_federated_dataset("ic", input_dim=64)
+    rng = np.random.default_rng(23)
+    winfos = [WorkerInfo(wid=i) for i in range(workers)]
+    kw = dict(lanes_per_worker=2, steps_cap=16, batch_size=20)
+
+    def sample_assignment():
+        cids = rng.choice(ds.n_clients, size=cohort, replace=False)
+        clients = [ClientInfo(cid=int(c), n_batches=ds.n_batches(int(c)),
+                              n_samples=ds.n_samples(int(c))) for c in cids]
+        per = {w.wid: [] for w in winfos}
+        for i, c in enumerate(clients):
+            per[winfos[i % workers].wid].append(c)
+        return Assignment(per_worker=per)
+
+    def pad_to_bucket(arrays):
+        # the engine's former post-pack recopy, reproduced for the baseline
+        S = s_bucket(arrays.n_steps)
+        if S == arrays.n_steps:
+            return arrays
+        pad = S - arrays.n_steps
+
+        def pad_s(a):
+            widths = [(0, 0)] * a.ndim
+            widths[2] = (0, pad)
+            return np.pad(a, widths)
+
+        arrays.batches = {k: pad_s(v) for k, v in arrays.batches.items()}
+        arrays.step_mask = pad_s(arrays.step_mask)
+        arrays.boundary = pad_s(arrays.boundary)
+        arrays.weight = pad_s(arrays.weight)
+        arrays.n_steps = S
+        return arrays
+
+    assignments = [sample_assignment() for _ in range(rounds)]
+    buf = PackBuffers(depth=2)
+    # warm the gather jit cache outside the timed region
+    build_round_arrays(ds, assignments[0], winfos, buffers=buf,
+                       s_align=s_bucket, **kw)
+
+    old_s, new_s, steps = [], [], 0
+    for a in assignments:
+        t0 = time.perf_counter()
+        arrays = pad_to_bucket(build_round_arrays_loop(ds, a, winfos, **kw))
+        old_s.append(time.perf_counter() - t0)
+        steps = int(arrays.step_mask.sum())
+        t0 = time.perf_counter()
+        vec = build_round_arrays(ds, a, winfos, buffers=buf,
+                                 s_align=s_bucket, **kw)
+        new_s.append(time.perf_counter() - t0)
+        assert vec.n_steps == arrays.n_steps
+        np.testing.assert_array_equal(vec.step_mask, arrays.step_mask)
+
+    return {
+        "cohort": cohort, "workers": workers, "rounds": rounds,
+        "real_steps_per_round": steps,
+        "loop_pack_pad_s_per_round": float(np.mean(old_s)),
+        "vectorized_pack_s_per_round": float(np.mean(new_s)),
+        "speedup_x": float(np.mean(old_s) / np.mean(new_s)),
+    }
+
+
+def _engine_comparison(*, rounds: int) -> dict:
+    import jax
+
+    from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                            UniformSampler, make_placement)
+    from repro.data import make_federated_dataset
+    from repro.distributed import WorkerPool
+    from repro.models.papertasks import make_task_model
+    from repro.optim import sgd
+
+    def build(depth):
+        ds = make_federated_dataset("sr", n_clients=256, input_dim=32,
+                                    batch_size=8)
+        params, loss = make_task_model("sr", jax.random.key(0), input_dim=32,
+                                       width=64, n_blocks=2)
+        return FederatedEngine(
+            dataset=ds, loss_fn=loss, init_params=params,
+            optimizer=sgd(0.1, momentum=0.9), placement=make_placement("lb"),
+            sampler=UniformSampler(256, 32),
+            pool=WorkerPool.homogeneous(4, type_name="a40", concurrency=2),
+            telemetry=SyntheticTelemetry(),
+            config=EngineConfig(steps_cap=8, batch_size=8,
+                                pipeline_depth=depth))
+
+    out = {}
+    for depth in (0, 1):
+        eng = build(depth)
+        eng.run(2)                          # warm compile outside the timing
+        t0 = time.perf_counter()
+        res = eng.run(rounds)
+        wall = time.perf_counter() - t0
+        out[f"depth{depth}"] = {
+            "rounds": rounds,
+            "wall_s_per_round": wall / rounds,
+            "pack_s_per_round": float(np.mean([r.pack_time for r in res])),
+            "overlap_fraction": float(np.mean(
+                [r.overlap_fraction for r in res])),
+            "recompiles": eng.compile_stats["compiles"],
+            "cache_hits": eng.compile_stats["hits"],
+            "final_loss": float(res[-1].loss),
+        }
+    out["pipeline_speedup_x"] = (out["depth0"]["wall_s_per_round"] /
+                                 out["depth1"]["wall_s_per_round"])
+    return out
+
+
+def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
+        engine_rounds: int = 8) -> list[str]:
+    pack = _pack_comparison(cohort=cohort, workers=workers,
+                            rounds=pack_rounds)
+    engine = _engine_comparison(rounds=engine_rounds)
+
+    record = {"benchmark": "pipeline", "pack": pack, "engine": engine}
+    out_path = os.environ.get(
+        "POLLEN_BENCH_OUT",
+        os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json"))
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+    rows = ["bench_pipeline,metric,value"]
+    rows.append(f"bench_pipeline,loop_pack_pad_s,"
+                f"{pack['loop_pack_pad_s_per_round']:.3f}")
+    rows.append(f"bench_pipeline,vectorized_pack_s,"
+                f"{pack['vectorized_pack_s_per_round']:.3f}")
+    rows.append(f"bench_pipeline,pack_speedup_x,{pack['speedup_x']:.1f}")
+    for depth in ("depth0", "depth1"):
+        e = engine[depth]
+        rows.append(f"bench_pipeline,{depth}_wall_s_per_round,"
+                    f"{e['wall_s_per_round']:.3f}")
+        rows.append(f"bench_pipeline,{depth}_overlap_fraction,"
+                    f"{e['overlap_fraction']:.2f}")
+        rows.append(f"bench_pipeline,{depth}_recompiles,{e['recompiles']}")
+    rows.append(f"bench_pipeline,pipeline_speedup_x,"
+                f"{engine['pipeline_speedup_x']:.2f}")
+    # acceptance: the vectorized pack must at least halve host pack+pad time
+    assert pack["speedup_x"] >= 2.0, pack
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -5,36 +5,60 @@ Per round:
   2. the sampler draws a cohort (placement is independent of selection, §3.1);
   3. optional deadline trim drops predicted stragglers (over-sampled cohort);
   4. the placement strategy one-shot assigns clients to workers (push-based);
-  5. ``build_round_arrays`` packs lane streams (padding = idle time);
-  6. the jitted round step trains + partially aggregates on device;
-  7. telemetry (measured or synthetic) is appended and the time model refit
-     for round t+1 *while devices would still be busy* (paper: fit uses data
-     up to t-2 — enforced inside TrainingTimeModel.refit);
+  5. the vectorized packer (``build_round_arrays``) fills reusable host
+     buffers already sized to the S-bucket — slot indices via numpy fancy
+     indexing, content via one bulk ``gather_batches`` call, zero post-pack
+     copies;
+  6. the jitted round step trains + partially aggregates on device, through
+     an explicit :class:`~repro.fl.round.StepCompileCache` (donated buffers,
+     counted recompiles, LRU eviction);
+  7. telemetry (measured or synthetic) is appended;
   8. periodic checkpoint.
 
+The time model is refit at the START of preparing round t (before its
+assignment), so the fit literally runs while round t-1 trains and —
+together with TrainingTimeModel's data <= t-2 cutoff — every assignment
+sees the same model regardless of pipeline depth or how run() calls are
+split.
+
+With ``pipeline_depth=1`` (the default) ``run`` overlaps host and device
+(paper §3.2's push-based pipelining applied to the simulator itself): while
+the device executes round t, a background thread samples/places/packs round
+t+1 and starts its ``jax.device_put`` transfers.  Placement for round t+1
+then sees the time model as of the end of round t-1 — exactly the paper's
+rule that the fit for round u uses telemetry from rounds <= u-2, because
+fitting happens while round u-1 trains.  ``pipeline_depth=0`` restores the
+fully synchronous loop.
+
 The number of distinct compiled programs is bounded by bucketing the stream
-length S to the next power-of-two-ish size (beyond-paper optimization
-"S-bucketing": bounded recompiles, bounded padding ≤ ~1.21x).
+length S to the next {1x, 1.5x} power-of-two multiple (beyond-paper
+optimization "S-bucketing": O(log S) shapes, padding overhead strictly
+< 1.5x worst-case — sup over s of bucket(s)/s approaches 1.5 from below at
+s = 2^k + 1 — and ~1.2x in expectation for uniformly-landing S).
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
 
 import jax
-import numpy as np
 
 from repro.core.placement import (Assignment, ClientInfo,
                                   LearningBasedPlacement, Placement)
-from repro.data.batching import build_round_arrays, padding_stats
-from repro.fl.round import make_round_step
+from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
+                                 padding_stats)
+from repro.fl.round import (StepCompileCache, make_gather_round_step,
+                            make_round_step)
 from repro.fl.strategy import FedAvg, Strategy
 
 
 def s_bucket(s: int, *, base: int = 8) -> int:
-    """Round S up to {base, base*1.5, base*2, ...}: ≤1.34x padding, O(log S)
-    distinct compiled shapes."""
+    """Round S up to {base, base*1.5, base*2, ...}: O(log S) distinct
+    compiled shapes, padding strictly < 1.5x (the sup of bucket(s)/s over
+    s > base is 1.5, approached at s = base*2^k + 1 but never attained;
+    e.g. base 8: s=9 -> 12 (1.33x), s=17 -> 24 (1.41x), s=33 -> 48 (1.45x))."""
     if s <= base:
         return base
     b = base
@@ -57,6 +81,9 @@ class RoundResult:
     wall_time: float         # actual host wall time of the round
     placement: str
     s_steps: int
+    pack_time: float = 0.0         # host time packing this round's arrays
+    overlap_fraction: float = 0.0  # fraction of pack hidden under round t-1
+    recompiles: int = 0            # cumulative step compiles so far
 
 
 @dataclass
@@ -71,6 +98,24 @@ class EngineConfig:
     grad_clip: float | None = None
     deadline_rho: float = 0.0     # >0 enables over-sample + trim
     seed: int = 1337
+    pipeline_depth: int = 1       # 0 = synchronous; 1 = prep t+1 during t
+    compile_cache_size: int = 8   # LRU cap on distinct compiled round steps
+    donate_buffers: bool = True   # donate params+batches into the step
+
+
+@dataclass
+class _PreparedRound:
+    """Everything round t needs, produced (possibly on a background thread)
+    before the device is asked to run it."""
+
+    t: int
+    clients: list
+    workers: list
+    assignment: Assignment
+    arrays: RoundArrays
+    device: tuple            # (batches, step_mask, boundary, weight) on device
+    pack_s: float            # host pack time (plan + gather + scatter)
+    overlap_s: float = 0.0   # portion of pack_s hidden under round t-1
 
 
 class FederatedEngine:
@@ -78,9 +123,13 @@ class FederatedEngine:
     placement x sampler x worker pool (+ telemetry source)."""
 
     def __init__(self, *, dataset, loss_fn, init_params, optimizer, placement: Placement,
-                 sampler, pool, telemetry=None, strategy: Strategy = FedAvg(),
-                 config: EngineConfig = EngineConfig(), checkpoint_store=None,
+                 sampler, pool, telemetry=None, strategy: Strategy | None = None,
+                 config: EngineConfig | None = None, checkpoint_store=None,
                  eval_fn=None):
+        # None-defaults: dataclass instances must be per-engine, or telemetry
+        # counters / config mutations would leak across engines.
+        strategy = FedAvg() if strategy is None else strategy
+        config = EngineConfig() if config is None else config
         self.dataset = dataset
         self.loss_fn = loss_fn
         self.params = init_params
@@ -95,19 +144,39 @@ class FederatedEngine:
         self.eval_fn = eval_fn
         self.round_idx = 0
         self.history: list[RoundResult] = []
+        # The run loop prepares at most ONE round ahead today (depth > 1 is
+        # a ROADMAP item), so cap the buffer ring accordingly — extra slots
+        # would only pin dead full-size host arrays.
+        self._pack_buffers = PackBuffers(
+            depth=min(config.pipeline_depth, 1) + 1)
+        donate = "all" if config.donate_buffers else "none"
         if not strategy.associative:
-            from repro.fl.round import make_gather_round_step
-            self._gather_step = jax.jit(
-                make_gather_round_step(loss_fn, optimizer,
-                                       grad_clip=config.grad_clip))
+            # The gather path reuses global_params after the step (the
+            # strategy's host-side reduce), so params cannot be donated.
+            self._gather_step = StepCompileCache(
+                lambda: make_gather_round_step(loss_fn, optimizer,
+                                               grad_clip=config.grad_clip),
+                capacity=config.compile_cache_size, donate="none")
             self._round_step = None
+            self._step_cache = self._gather_step
         else:
-            self._round_step = jax.jit(
-                make_round_step(loss_fn, optimizer, agg_impl=config.agg_impl,
-                                grad_clip=config.grad_clip))
+            self._round_step = StepCompileCache(
+                lambda: make_round_step(loss_fn, optimizer,
+                                        agg_impl=config.agg_impl,
+                                        grad_clip=config.grad_clip),
+                capacity=config.compile_cache_size, donate=donate)
             self._gather_step = None
+            self._step_cache = self._round_step
 
     # -- helpers -------------------------------------------------------------
+    @property
+    def compile_stats(self) -> dict:
+        """Recompile/eviction/hit counters of the round-step cache."""
+        return self._step_cache.stats()
+
+    def _s_align(self, s_real: int) -> int:
+        return s_bucket(s_real, base=self.cfg.s_bucket_base)
+
     def _cohort(self, t: int) -> list[ClientInfo]:
         if self.cfg.deadline_rho > 0:
             from repro.distributed.elastic import deadline_trim, oversample_cohort
@@ -152,77 +221,147 @@ class FederatedEngine:
         idle = sum(makespan - v for v in loads.values())
         return makespan, idle
 
-    # -- the round -------------------------------------------------------------
-    def run_round(self) -> RoundResult:
-        t = self.round_idx
-        t0 = time.perf_counter()
+    # -- the pipeline stages ---------------------------------------------------
+    def _prepare_round(self, t: int) -> _PreparedRound:
+        """Host-side producer: sample, place, pack, start the H2D transfer.
+
+        Runs on the pipeline's background thread for round t+1 while the
+        device executes round t; it must not touch state the consumer half
+        mutates (telemetry records, the time-model fit) — the run loop joins
+        it before recording telemetry.
+        """
+        tp0 = time.perf_counter()
         self.pool.advance_to(t)
         workers = self.pool.snapshot()
+        if isinstance(self.placement, LearningBasedPlacement):
+            # The paper's protocol, literally: the fit for round t runs
+            # while round t-1 trains (here: on the pack thread, during the
+            # previous round's device execution) and TrainingTimeModel
+            # enforces the data <= t-2 cutoff.  Fitting here — not in the
+            # consumer tail — makes the model any assignment sees identical
+            # across pipeline depths and across split run() calls.
+            self.placement.refit(t)
         clients = self._cohort(t)
         assignment = self.placement.assign(clients, workers)
-
         arrays = build_round_arrays(
             self.dataset, assignment, workers,
             lanes_per_worker=self.cfg.lanes_per_worker,
             steps_cap=self.cfg.steps_cap, batch_size=self.cfg.batch_size,
-            seq_len=self.cfg.seq_len, min_steps=1)
-        # S-bucketing: pad stream length to a bucket to bound recompiles.
-        S = s_bucket(arrays.n_steps, base=self.cfg.s_bucket_base)
-        if S != arrays.n_steps:
-            pad = S - arrays.n_steps
+            seq_len=self.cfg.seq_len, min_steps=1,
+            s_align=self._s_align, buffers=self._pack_buffers)
+        pack_s = time.perf_counter() - tp0
+        # Explicit async H2D: transfers overlap the in-flight round's compute.
+        device = (jax.device_put(arrays.batches),
+                  jax.device_put(arrays.step_mask),
+                  jax.device_put(arrays.boundary),
+                  jax.device_put(arrays.weight))
+        return _PreparedRound(t=t, clients=clients, workers=workers,
+                              assignment=assignment, arrays=arrays,
+                              device=device, pack_s=pack_s)
 
-            def pad_s(a, axis=2):
-                widths = [(0, 0)] * a.ndim
-                widths[axis] = (0, pad)
-                return np.pad(a, widths)
-
-            arrays.batches = {k: pad_s(v) for k, v in arrays.batches.items()}
-            arrays.step_mask = pad_s(arrays.step_mask)
-            arrays.boundary = pad_s(arrays.boundary)
-            arrays.weight = pad_s(arrays.weight)
-            arrays.n_steps = S
-
+    def _execute(self, prep: _PreparedRound):
+        """Dispatch the compiled round step (async); returns metrics."""
         if self.strategy.associative:
-            new_params, metrics = self._round_step(
-                self.params, arrays.batches, arrays.step_mask,
-                arrays.boundary, arrays.weight)
+            new_params, metrics = self._round_step(self.params, *prep.device)
             self.params = new_params
         else:
-            stacked, ws, metrics = self._gather_step(
-                self.params, arrays.batches, arrays.step_mask,
-                arrays.boundary, arrays.weight)
+            stacked, ws, metrics = self._gather_step(self.params, *prep.device)
             self.params = self.strategy.reduce(stacked, ws, self.params)
+        return metrics
 
-        makespan, idle = self._record_telemetry(t, assignment, workers)
-        if isinstance(self.placement, LearningBasedPlacement):
-            # Fit for round t+1 happens now, while (on a real cluster) devices
-            # are still finishing — uses data ≤ (t+1)-2 internally.
-            self.placement.refit(t + 1)
-
-        stats = padding_stats(arrays)
+    def _finish(self, prep: _PreparedRound, metrics, t0: float) -> RoundResult:
+        """Consumer tail: telemetry, result bookkeeping, periodic
+        checkpoint.  (The time-model refit lives in ``_prepare_round``.)"""
+        t = prep.t
+        loss = float(metrics.loss)             # device sync point
+        makespan, idle = self._record_telemetry(t, prep.assignment,
+                                                prep.workers)
+        stats = padding_stats(prep.arrays)
         result = RoundResult(
-            round_idx=t, loss=float(metrics.loss), n_clients=len(clients),
+            round_idx=t, loss=loss, n_clients=len(prep.clients),
             makespan=makespan, idle_time=idle,
             useful_fraction=stats["useful_fraction"],
             wall_time=time.perf_counter() - t0,
-            placement=self.placement.name, s_steps=arrays.n_steps)
+            placement=self.placement.name, s_steps=prep.arrays.n_steps,
+            pack_time=prep.pack_s,
+            overlap_fraction=(prep.overlap_s / prep.pack_s
+                              if prep.pack_s > 0 else 0.0),
+            recompiles=self._step_cache.compiles)
         self.history.append(result)
-        self.round_idx += 1
+        self.round_idx = t + 1
 
         if self.ckpt is not None and (t + 1) % self.cfg.rounds_per_checkpoint == 0:
             self.save_checkpoint()
         return result
 
+    # -- the round -------------------------------------------------------------
+    def run_round(self) -> RoundResult:
+        """One fully synchronous round (also the ``pipeline_depth=0`` path)."""
+        t0 = time.perf_counter()
+        prep = self._prepare_round(self.round_idx)
+        metrics = self._execute(prep)
+        return self._finish(prep, metrics, t0)
+
+    def _run_pipelined(self, n_rounds: int, *, log_every: int = 0) -> list[RoundResult]:
+        """Producer/consumer round loop: round t+1's host work (sample →
+        place → pack → device_put) runs on a background thread while round t
+        executes on device.  The future is joined *before* telemetry is
+        recorded, so the background refit/placement never runs concurrently
+        with ``placement.observe`` — results are deterministic, and the
+        model any round's assignment sees follows the paper's data <= t-2
+        recency rule."""
+        out: list[RoundResult] = []
+        first = self.round_idx
+        last = first + n_rounds - 1
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="pollen-pack") as pool:
+            prep = self._prepare_round(first)
+            for t in range(first, last + 1):
+                t0 = time.perf_counter()
+                fut = (pool.submit(self._prepare_round, t + 1)
+                       if t < last else None)
+                metrics = self._execute(prep)
+                loss = float(metrics.loss)     # noqa: F841 — device sync
+                exec_s = time.perf_counter() - t0
+                next_prep, prep_err = None, None
+                if fut is not None:
+                    try:
+                        next_prep = fut.result()
+                    except Exception as e:     # noqa: BLE001
+                        # Round t already executed — book it before raising,
+                        # or a retrying caller would train round t twice.
+                        prep_err = e
+                if next_prep is not None:
+                    next_prep.overlap_s = min(next_prep.pack_s, exec_s)
+                r = self._finish(prep, metrics, t0)
+                out.append(r)
+                if prep_err is not None:
+                    raise prep_err
+                if log_every and r.round_idx % log_every == 0:
+                    self._log_round(r)
+                prep = next_prep
+        return out
+
     def run(self, n_rounds: int, *, log_every: int = 0) -> list[RoundResult]:
+        if n_rounds <= 0:
+            return []
+        if self.cfg.pipeline_depth > 0:
+            return self._run_pipelined(n_rounds, log_every=log_every)
         out = []
         for _ in range(n_rounds):
             r = self.run_round()
             out.append(r)
             if log_every and r.round_idx % log_every == 0:
-                print(f"round {r.round_idx:5d} loss={r.loss:.4f} "
-                      f"clients={r.n_clients} S={r.s_steps} "
-                      f"useful={r.useful_fraction:.2%} idle={r.idle_time:.1f}s")
+                self._log_round(r)
         return out
+
+    @staticmethod
+    def _log_round(r: RoundResult) -> None:
+        print(f"round {r.round_idx:5d} loss={r.loss:.4f} "
+              f"clients={r.n_clients} S={r.s_steps} "
+              f"useful={r.useful_fraction:.2%} idle={r.idle_time:.1f}s "
+              f"pack={r.pack_time * 1e3:.0f}ms "
+              f"overlap={r.overlap_fraction:.0%}")
 
     # -- fault tolerance -------------------------------------------------------
     def save_checkpoint(self) -> None:

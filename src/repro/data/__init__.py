@@ -1,5 +1,9 @@
 from .federated import FederatedDataset, TASK_DISTRIBUTIONS, make_federated_dataset
-from .batching import RoundArrays, build_round_arrays, lane_split, padding_stats
+from .batching import (PackBuffers, RoundArrays, RoundPlan,
+                       build_round_arrays, build_round_arrays_loop,
+                       lane_split, padding_stats, plan_round)
 
 __all__ = ["FederatedDataset", "TASK_DISTRIBUTIONS", "make_federated_dataset",
-           "RoundArrays", "build_round_arrays", "lane_split", "padding_stats"]
+           "PackBuffers", "RoundArrays", "RoundPlan", "build_round_arrays",
+           "build_round_arrays_loop", "lane_split", "padding_stats",
+           "plan_round"]

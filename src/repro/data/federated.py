@@ -118,16 +118,23 @@ class FederatedDataset:
         return max(1, int(self.n_samples(cid)) // bs)
 
     # -- deterministic content ---------------------------------------------
-    def _key(self, cid: int, batch_idx: int):
+    def _key(self, cid, batch_idx):
+        """Per-(client, batch) PRNG key; ``cid``/``batch_idx`` may be Python
+        ints (one-off path) or traced int32 arrays (bulk path) — fold_in is
+        elementwise either way, so both paths draw identical keys."""
         k = jax.random.key(self.seed)
         k = jax.random.fold_in(k, cid % (2 ** 31 - 1))
         return jax.random.fold_in(k, batch_idx)
 
-    def client_batch(self, cid: int, batch_idx: int, *, batch_size=None,
-                     seq_len=None) -> dict:
-        """Materialize one batch of this client's data."""
-        bs = batch_size or self.spec.batch_size
-        sl = seq_len or self.seq_len
+    def _content(self, cid, batch_idx, offset, probs, bs: int, sl: int) -> dict:
+        """One batch of content from its key.  Pure and traceable: the single
+        source of truth for both :meth:`client_batch` and the vectorized
+        :meth:`gather_batches` (which vmaps it), keeping the two bit-identical.
+
+        ``offset`` (tokens) and ``probs`` (labelled tasks) are precomputed on
+        the host because they involve int64 modular arithmetic / table rows
+        indexed by cid — passing them in keeps the traced math 32-bit safe.
+        """
         key = self._key(cid, batch_idx)
         kind = self.spec.kind
         if kind == "tokens":
@@ -135,14 +142,12 @@ class FederatedDataset:
             # slice of the vocab (non-IID token distribution).
             k1, k2 = jax.random.split(key)
             base = jax.random.randint(k1, (bs, sl), 0, self.vocab_size)
-            offset = (cid * 2_654_435_761) % max(self.vocab_size // 4, 1)
             tokens = (base // 4 + offset) % self.vocab_size
             return {"tokens": tokens.astype(jnp.int32)}
         if kind in ("image", "audio", "embeddings"):
             k1, k2 = jax.random.split(key)
             x = jax.random.normal(k1, (bs, self.input_dim), dtype=jnp.float32)
-            if self.spec.n_classes and self._class_logits is not None:
-                probs = self._class_logits[cid % len(self._class_logits)]
+            if probs is not None:
                 y = jax.random.choice(k2, self.spec.n_classes, shape=(bs,),
                                       p=jnp.asarray(probs))
                 # Make the task learnable: shift inputs by a class-dependent
@@ -153,6 +158,92 @@ class FederatedDataset:
                 return {"x": x, "y": y.astype(jnp.int32)}
             return {"x": x}
         raise ValueError(kind)
+
+    def _token_offset(self, cids):
+        """Host-side (int64-safe) client vocab offset for the tokens tasks."""
+        return (np.asarray(cids, dtype=np.int64) * 2_654_435_761) % max(
+            self.vocab_size // 4, 1)
+
+    def client_batch(self, cid: int, batch_idx: int, *, batch_size=None,
+                     seq_len=None) -> dict:
+        """Materialize one batch of this client's data.
+
+        Implemented as a size-1 :meth:`gather_batches` so the one-off and
+        bulk paths run the *same* compiled program — guaranteeing the
+        vectorized round packer is bit-identical to per-batch fetching
+        (eager vs jit can differ by an FMA-fusion ULP otherwise).
+        """
+        out = self.gather_batches(np.asarray([cid]), np.asarray([batch_idx]),
+                                  batch_size=batch_size, seq_len=seq_len)
+        return {k: v[0] for k, v in out.items()}
+
+    # -- bulk fetch (the round packer's fast path) -------------------------
+    def gather_batches(self, cids, batch_idxs, *, batch_size=None,
+                       seq_len=None) -> dict:
+        """Materialize many (client, batch) pairs in one fused device call.
+
+        Returns ``{name: [N, ...]}`` bit-identical to stacking N
+        :meth:`client_batch` calls, at a fraction of the host cost: the
+        per-batch Python/dispatch overhead (the round-loop bottleneck this
+        replaces) collapses into one jitted vmap.  The jit cache is bounded
+        by rounding N up to the next power of two (extra rows are computed
+        for (0, 0) and sliced off).
+        """
+        cids = np.asarray(cids, dtype=np.int64)
+        bis = np.asarray(batch_idxs, dtype=np.int64)
+        if cids.shape != bis.shape or cids.ndim != 1:
+            raise ValueError("cids and batch_idxs must be equal-length 1-D")
+        n = cids.shape[0]
+        if n == 0:
+            sample = self.client_batch(0, 0, batch_size=batch_size,
+                                       seq_len=seq_len)
+            return {k: np.zeros((0,) + np.shape(v), np.asarray(v).dtype)
+                    for k, v in sample.items()}
+        bs = batch_size or self.spec.batch_size
+        sl = seq_len or self.seq_len
+        m = 1 << (n - 1).bit_length()          # pow2-bucketed jit shapes
+        pad = m - n
+        if pad:
+            cids = np.concatenate([cids, np.zeros(pad, np.int64)])
+            bis = np.concatenate([bis, np.zeros(pad, np.int64)])
+        cid32 = (cids % (2 ** 31 - 1)).astype(np.int32)
+        bi32 = bis.astype(np.int32)
+        args = [jnp.asarray(cid32), jnp.asarray(bi32)]
+        if self.spec.kind == "tokens":
+            args.append(jnp.asarray(self._token_offset(cids).astype(np.int32)))
+        elif self.spec.n_classes and self._class_logits is not None:
+            rows = cids % len(self._class_logits)
+            args.append(jnp.asarray(self._class_logits[rows],
+                                    dtype=jnp.float32))
+        fn = self._bulk_fn(bs, sl)
+        out = fn(*args)
+        return {k: np.asarray(v)[:n] for k, v in out.items()}
+
+    def _bulk_fn(self, bs: int, sl: int):
+        cache = getattr(self, "_bulk_cache", None)
+        if cache is None:
+            cache = self._bulk_cache = {}
+        fn = cache.get((bs, sl))
+        if fn is None:
+            kind = self.spec.kind
+            labelled = bool(self.spec.n_classes) and \
+                self._class_logits is not None
+
+            def elem(cid32, bi32, extra=None):
+                # cid32 is already reduced mod 2**31-1, so _key's traced
+                # ``cid % (2**31-1)`` is a no-op and matches the host path.
+                if kind == "tokens":
+                    return self._content(cid32, bi32, extra, None, bs, sl)
+                return self._content(cid32, bi32, 0,
+                                     extra if labelled else None, bs, sl)
+
+            n_extra = 1 if (kind == "tokens" or labelled) else 0
+            if n_extra:
+                fn = jax.jit(jax.vmap(elem))
+            else:
+                fn = jax.jit(jax.vmap(lambda c, b: elem(c, b)))
+            cache[(bs, sl)] = fn
+        return fn
 
 
 def make_federated_dataset(task: str, *, seed: int = 1337, **overrides

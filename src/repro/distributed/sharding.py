@@ -46,6 +46,10 @@ class ShardingRules:
         out = []
         for ax in template:
             m = self.axis_map.get(ax, None) if ax is not None else None
+            # Canonicalize 1-tuples to the bare axis name: newer jax does
+            # this inside PartitionSpec; older versions compare unequal.
+            if isinstance(m, tuple) and len(m) == 1:
+                m = m[0]
             out.append(m)
         return P(*out)
 

@@ -26,6 +26,8 @@ idle time the placement model minimizes.
 
 from __future__ import annotations
 
+import warnings
+from collections import OrderedDict
 from typing import Any, NamedTuple
 
 import jax
@@ -35,7 +37,8 @@ from repro.core.aggregation import (PartialAggregate, partial_init,
                                     partial_update, tree_weighted_mean)
 from repro.optim.optimizers import apply_updates
 
-__all__ = ["make_round_step", "make_gather_round_step", "RoundMetrics"]
+__all__ = ["make_round_step", "make_gather_round_step", "RoundMetrics",
+           "StepCompileCache", "round_shape_key"]
 
 
 class RoundMetrics(NamedTuple):
@@ -179,3 +182,87 @@ def make_gather_round_step(loss_fn, optimizer, *, grad_clip: float | None = None
         return flat_theta, flat_w, metrics
 
     return round_step
+
+
+def round_shape_key(batches, step_mask) -> tuple:
+    """Compile-cache key of a round's input signature: (W, P, S) plus every
+    batch leaf's trailing shape/dtype.  Params shapes are engine-constant, so
+    they stay out of the key."""
+    W, P, S = step_mask.shape
+    leaves = tuple(sorted((name, tuple(a.shape[3:]), str(a.dtype))
+                          for name, a in batches.items()))
+    return (W, P, S) + leaves
+
+
+class StepCompileCache:
+    """Explicit LRU of jitted round-step executables.
+
+    ``jax.jit`` keeps an unbounded, invisible cache per wrapper; the engine
+    instead threads every call through this cache so (a) recompiles are a
+    *counted, observable* event (the telemetry the S-bucketing optimization
+    is judged by), (b) old executables for shapes that stopped occurring are
+    evicted (bounded device/host memory), and (c) buffer donation is applied
+    uniformly.
+
+    ``donate``: 'all' donates params + batches + masks (params update in
+    place; batch/mask device buffers are freed at consumption), 'params'
+    donates only argument 0, 'none' disables donation (the gather path,
+    whose caller still needs ``global_params`` after the step).
+    """
+
+    def __init__(self, factory, *, capacity: int = 8, donate: str = "all"):
+        if donate not in ("all", "params", "none"):
+            raise ValueError(f"donate must be all|params|none, got {donate!r}")
+        self._factory = factory          # () -> python round_step fn
+        self.capacity = max(1, int(capacity))
+        self.donate = donate
+        self._entries: OrderedDict[tuple, Any] = OrderedDict()
+        self.compiles = 0
+        self.evictions = 0
+        self.hits = 0
+
+    def _jit(self):
+        donate_argnums = {"all": (0, 1, 2, 3, 4), "params": (0,),
+                          "none": ()}[self.donate]
+        return jax.jit(self._factory(), donate_argnums=donate_argnums)
+
+    def lookup(self, key: tuple):
+        """The jitted fn for ``key`` (compiling + evicting as needed).
+
+        Returns (fn, fresh): ``fresh`` is True when this key will compile on
+        its first invocation."""
+        fn = self._entries.get(key)
+        fresh = fn is None
+        if fresh:
+            self.compiles += 1
+            fn = self._jit()
+            self._entries[key] = fn
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        else:
+            self.hits += 1
+            self._entries.move_to_end(key)
+        return fn, fresh
+
+    def __call__(self, params, batches, step_mask, boundary, weight):
+        fn, fresh = self.lookup(round_shape_key(batches, step_mask))
+        if not fresh:
+            return fn(params, batches, step_mask, boundary, weight)
+        # Donated batch/mask buffers cannot alias the (params-shaped)
+        # outputs; XLA reports that once, at compile.  Expected, not
+        # actionable — suppress it for the compiling call only.  (The filter
+        # tweak is process-global for this one call; a warning raised
+        # concurrently on the pipeline's pack thread during a compile could
+        # be affected, an accepted trade-off vs. wrapping every step.)
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return fn(params, batches, step_mask, boundary, weight)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {"compiles": self.compiles, "evictions": self.evictions,
+                "hits": self.hits, "entries": len(self._entries)}

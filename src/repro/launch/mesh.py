@@ -16,22 +16,29 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "axis_sizes"]
+__all__ = ["make_production_mesh", "make_test_mesh", "axis_sizes",
+           "mesh_axis_types_kwargs"]
 
 
-def _auto(axes):
-    return (jax.sharding.AxisType.Auto,) * len(axes)
+def mesh_axis_types_kwargs(axes) -> dict:
+    """``axis_types=`` kwargs for :func:`jax.make_mesh`, or ``{}`` on jax
+    versions (< 0.5) that predate ``jax.sharding.AxisType`` — where every
+    mesh axis is implicitly Auto anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * len(axes)}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_types_kwargs(axes))
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over however many (host) devices exist — smoke tests."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_types_kwargs(axes))
 
 
 def axis_sizes(mesh) -> dict:

@@ -22,6 +22,7 @@ import json
 from dataclasses import replace
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointStore
@@ -60,18 +61,42 @@ class _FrontendDataset:
         return getattr(self.base, name)
 
     def client_batch(self, cid, batch_idx, *, batch_size=None, seq_len=None):
-        b = self.base.client_batch(cid, batch_idx, batch_size=batch_size,
-                                   seq_len=seq_len)
+        out = self.gather_batches(np.asarray([cid]), np.asarray([batch_idx]),
+                                  batch_size=batch_size, seq_len=seq_len)
+        return {k: v[0] for k, v in out.items()}
+
+    def gather_batches(self, cids, batch_idxs, *, batch_size=None,
+                       seq_len=None):
+        """Bulk fetch (the vectorized packer's fast path): token content from
+        the base dataset plus the vmapped frontend-stub arrays."""
+        b = self.base.gather_batches(cids, batch_idxs, batch_size=batch_size,
+                                     seq_len=seq_len)
         cfg = self.cfg
-        bs = b["tokens"].shape[0]
-        key = jax.random.fold_in(jax.random.key(7), cid * 131 + batch_idx)
+        if not cfg.frontend:
+            return b
+        if b["tokens"].shape[0] == 0:
+            bs0 = batch_size or self.base.spec.batch_size
+            if cfg.frontend == "patch":
+                b["patch_embed"] = np.zeros(
+                    (0, bs0, cfg.frontend_len, cfg.resolved_frontend_dim),
+                    np.float32)
+            else:
+                b["frames"] = np.zeros(
+                    (0, bs0, cfg.frontend_len, cfg.d_model), np.float32)
+            return b
+        bs = b["tokens"].shape[1]
+        folds = (np.asarray(cids, np.int64) * 131 +
+                 np.asarray(batch_idxs, np.int64)).astype(np.int32)
         if cfg.frontend == "patch":
-            b["patch_embed"] = jax.random.normal(
-                key, (bs, cfg.frontend_len, cfg.resolved_frontend_dim),
-                np.float32)
-        elif cfg.frontend == "audio":
-            b["frames"] = jax.random.normal(
-                key, (bs, cfg.frontend_len, cfg.d_model), np.float32)
+            shape = (bs, cfg.frontend_len, cfg.resolved_frontend_dim)
+            name = "patch_embed"
+        else:
+            shape = (bs, cfg.frontend_len, cfg.d_model)
+            name = "frames"
+        stub = jax.vmap(lambda f: jax.random.normal(
+            jax.random.fold_in(jax.random.key(7), f), shape, np.float32))(
+                jnp.asarray(folds))
+        b[name] = np.asarray(stub)
         return b
 
 

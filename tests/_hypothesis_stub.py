@@ -1,0 +1,103 @@
+"""Minimal fallback for ``hypothesis`` on environments without it.
+
+The tier-1 suite uses a small slice of hypothesis (``given``/``settings`` and
+the ``integers``/``floats``/``lists``/``sampled_from`` strategies).  When the
+real library is installed, ``tests/conftest.py`` never loads this module; when
+it is missing, this shim runs the same property tests over a deterministic
+pseudo-random sample of the strategy space, so the suite still collects and
+exercises the properties (without shrinking/replay, which only the real
+library provides).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    """Stand-in for ``hypothesis.strategies`` (module-like class)."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng):
+            # Hit the endpoints sometimes: they are the classic edge cases.
+            r = rng.random()
+            if r < 0.05:
+                return lo
+            if r < 0.10:
+                return hi
+            return lo + (hi - lo) * rng.random()
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+
+        def draw(rng):
+            n = rng.randint(min_size, hi)
+            return [elements.example_from(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("stub @given supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            for i in range(n):
+                drawn = {k: s.example_from(rng)
+                         for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i}: {drawn!r}") from e
+
+        # Mirror the real library's attribute: plugins (e.g. anyio) look up
+        # ``fn.hypothesis.inner_test`` to find the undecorated test.
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the original signature, otherwise pytest treats the strategy
+        # kwargs as fixtures (the real @given does the same).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco

@@ -1,0 +1,293 @@
+"""Pipelined round execution: vectorized packing, buffer reuse, S-bucketing
+bounds, compile-cache accounting, and host/device-overlap equivalence."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                        UniformSampler, make_placement, s_bucket)
+from repro.core.placement import Assignment, ClientInfo, WorkerInfo
+from repro.data import make_federated_dataset
+from repro.data.batching import (PackBuffers, build_round_arrays,
+                                 build_round_arrays_loop, plan_round)
+from repro.distributed import WorkerPool
+from repro.fl.round import StepCompileCache, round_shape_key
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+
+
+# -- vectorized packer ≡ loop packer ----------------------------------------
+
+def _random_assignment(rng, ds, n_clients, n_workers):
+    cids = rng.choice(min(ds.n_clients, 500), size=n_clients, replace=False)
+    clients = [ClientInfo(cid=int(c), n_batches=ds.n_batches(int(c)),
+                          n_samples=ds.n_samples(int(c))) for c in cids]
+    workers = [WorkerInfo(wid=int(w))
+               for w in rng.choice(64, size=n_workers, replace=False)]
+    per = {w.wid: [] for w in workers}
+    for c in clients:
+        per[workers[rng.integers(n_workers)].wid].append(c)
+    return Assignment(per_worker=per), workers
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_clients=st.integers(1, 16),
+       n_workers=st.integers(1, 4), lanes=st.integers(1, 3))
+def test_vectorized_packer_bit_identical_to_loop(seed, n_clients, n_workers,
+                                                 lanes):
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=8, batch_size=2)
+    rng = np.random.default_rng(seed)
+    assignment, workers = _random_assignment(rng, ds, n_clients, n_workers)
+    kw = dict(lanes_per_worker=lanes, steps_cap=4, batch_size=2)
+    vec = build_round_arrays(ds, assignment, workers, **kw)
+    ref = build_round_arrays_loop(ds, assignment, workers, **kw)
+    assert vec.n_steps == ref.n_steps
+    np.testing.assert_array_equal(vec.step_mask, ref.step_mask)
+    np.testing.assert_array_equal(vec.boundary, ref.boundary)
+    np.testing.assert_array_equal(vec.weight, ref.weight)
+    assert set(vec.batches) == set(ref.batches)
+    for name in vec.batches:
+        np.testing.assert_array_equal(vec.batches[name], ref.batches[name])
+
+
+def test_packer_tokens_task_bit_identical():
+    ds = make_federated_dataset("tg")
+    rng = np.random.default_rng(3)
+    assignment, workers = _random_assignment(rng, ds, 9, 3)
+    kw = dict(lanes_per_worker=2, steps_cap=3, batch_size=2, seq_len=16)
+    vec = build_round_arrays(ds, assignment, workers, **kw)
+    ref = build_round_arrays_loop(ds, assignment, workers, **kw)
+    np.testing.assert_array_equal(vec.batches["tokens"], ref.batches["tokens"])
+    np.testing.assert_array_equal(vec.step_mask, ref.step_mask)
+
+
+def test_round_plan_indices_cover_each_step_once():
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=8, batch_size=2)
+    rng = np.random.default_rng(11)
+    assignment, workers = _random_assignment(rng, ds, 12, 3)
+    plan = plan_round(assignment, workers, lanes_per_worker=2, steps_cap=5)
+    # no slot is written twice
+    flat = plan.w_idx * 10_000 + plan.p_idx * 1_000 + plan.s_idx
+    assert len(np.unique(flat)) == plan.n_steps_total
+    # every client's steps are contiguous and batch_idx counts from 0
+    assert plan.batch_idx.min() == 0
+    assert plan.s_idx.max() < plan.s_real
+    # one boundary per placed client, at that client's last step
+    n_placed = sum(len(v) for v in assignment.per_worker.values())
+    assert plan.n_clients == n_placed
+
+
+def test_s_align_allocates_bucketed_no_pad_needed():
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=8, batch_size=2)
+    rng = np.random.default_rng(5)
+    assignment, workers = _random_assignment(rng, ds, 10, 2)
+    arrays = build_round_arrays(ds, assignment, workers, steps_cap=9,
+                                batch_size=2, s_align=s_bucket)
+    assert arrays.n_steps == s_bucket(arrays.n_real_steps)
+    # the bucket tail is pure masked padding
+    assert arrays.step_mask[..., arrays.n_real_steps:].sum() == 0
+    for v in arrays.batches.values():
+        assert v.shape[2] == arrays.n_steps
+
+
+def test_pack_buffers_ring_reuses_and_isolates():
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=8, batch_size=2)
+    rng = np.random.default_rng(9)
+    assignment, workers = _random_assignment(rng, ds, 8, 2)
+    buf = PackBuffers(depth=2)
+    kw = dict(steps_cap=4, batch_size=2, s_align=s_bucket, buffers=buf)
+    r1 = build_round_arrays(ds, assignment, workers, **kw)
+    r2 = build_round_arrays(ds, assignment, workers, **kw)
+    r3 = build_round_arrays(ds, assignment, workers, **kw)
+    # depth-2 double buffering: consecutive rounds never share arrays …
+    assert r1.step_mask is not r2.step_mask
+    # … and the ring wraps on the third acquire
+    assert r3.step_mask is r1.step_mask
+    np.testing.assert_array_equal(r2.step_mask, r3.step_mask)
+    np.testing.assert_array_equal(r2.weight, r3.weight)
+
+
+# -- S-bucketing bound -------------------------------------------------------
+
+def test_s_bucket_monotone_idempotent_and_bounded():
+    prev = 0
+    for s in range(1, 4096):
+        b = s_bucket(s)
+        assert b >= s                      # never truncates
+        assert b >= prev                   # monotone non-decreasing
+        assert s_bucket(b) == b            # buckets are fixed points
+        if s > 8:
+            # true worst case for base-8 {1.0, 1.5} buckets: sup of
+            # bucket(s)/s is 1.5, approached at s = 8*2^k + 1, never hit.
+            assert b < 1.5 * s
+        prev = b
+    # the sup really is approached (so the documented 1.5 is tight)
+    s = 8 * 2 ** 10 + 1
+    assert s_bucket(s) / s > 1.49
+
+
+# -- compile cache -----------------------------------------------------------
+
+def test_step_cache_counts_compiles_hits_evictions():
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=8,
+                                   width=16, n_blocks=1)
+    from repro.fl.round import make_round_step
+    cache = StepCompileCache(lambda: make_round_step(loss, sgd(0.1)),
+                             capacity=2)
+
+    def arrays_for(S):
+        rng = np.random.default_rng(S)
+        batches = {"x": rng.normal(size=(1, 1, S, 2, 8)).astype(np.float32),
+                   "y": rng.integers(0, 35, size=(1, 1, S, 2)).astype(np.int32)}
+        mask = np.ones((1, 1, S), np.float32)
+        boundary = np.zeros((1, 1, S), np.float32)
+        boundary[..., -1] = 1.0
+        return batches, mask, boundary, boundary.copy()
+
+    # donation invalidates the params passed in (that is the point: XLA
+    # updates them in place) — thread the returned params forward like the
+    # engine does.
+    for S, compiles, hits in [(4, 1, 0), (4, 1, 1), (6, 2, 1), (4, 2, 2)]:
+        b, m, bd, w = arrays_for(S)
+        params, metrics = cache(params, b, m, bd, w)
+        assert np.isfinite(float(metrics.loss))
+        assert cache.compiles == compiles and cache.hits == hits
+    assert cache.evictions == 0
+    # third distinct shape evicts the LRU entry (capacity 2) …
+    b, m, bd, w = arrays_for(8)
+    params, _ = cache(params, b, m, bd, w)
+    assert cache.evictions == 1 and len(cache) == 2
+    # … so the evicted shape recompiles when it comes back
+    before = cache.compiles
+    b, m, bd, w = arrays_for(6)
+    params, _ = cache(params, b, m, bd, w)
+    assert cache.compiles == before + 1
+
+
+def test_round_shape_key_ignores_content():
+    a = {"x": np.zeros((2, 1, 4, 3, 8), np.float32)}
+    b = {"x": np.ones((2, 1, 4, 3, 8), np.float32)}
+    m = np.zeros((2, 1, 4), np.float32)
+    assert round_shape_key(a, m) == round_shape_key(b, m)
+    c = {"x": np.zeros((2, 1, 6, 3, 8), np.float32)}
+    assert round_shape_key(a, m) != round_shape_key(c, np.zeros((2, 1, 6),
+                                                               np.float32))
+
+
+# -- pipelined engine ≡ synchronous engine -----------------------------------
+
+def _engine(pipeline_depth, placement="rr", rounds_per_ckpt=100,
+            donate=True):
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
+                                batch_size=4, size_mu=2.5, size_sigma=0.8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=2)
+    return FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement(placement),
+        sampler=UniformSampler(64, 8),
+        pool=WorkerPool.homogeneous(2, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(steps_cap=4, batch_size=4,
+                            rounds_per_checkpoint=rounds_per_ckpt,
+                            pipeline_depth=pipeline_depth,
+                            donate_buffers=donate))
+
+
+def test_pipeline_depth1_matches_depth0_losses_exactly():
+    """RR placement is telemetry-independent, so depth 0 and depth 1 run
+    byte-identical rounds — losses must agree bit-for-bit."""
+    sync = _engine(0).run(6)
+    pipe = _engine(1).run(6)
+    assert [r.loss for r in sync] == [r.loss for r in pipe]
+    assert [r.s_steps for r in sync] == [r.s_steps for r in pipe]
+    assert [r.n_clients for r in sync] == [r.n_clients for r in pipe]
+
+
+def test_pipeline_depth1_matches_depth0_losses_lb():
+    """Both depths feed round u's assignment a fit on data <= u-2 (the
+    pipelined refit just runs one call earlier), so LB placements — and
+    therefore losses — are bit-identical too."""
+    sync = _engine(0, placement="lb").run(6)
+    pipe = _engine(1, placement="lb").run(6)
+    assert [r.loss for r in sync] == [r.loss for r in pipe]
+
+
+def test_pipeline_split_runs_resume_cleanly():
+    """Splitting a pipelined run must not change results — including under
+    LB placement, whose refit cadence crosses the run() boundary."""
+    for placement in ("rr", "lb"):
+        whole = _engine(1, placement=placement).run(6)
+        eng = _engine(1, placement=placement)
+        split = eng.run(3) + eng.run(3)
+        assert [r.loss for r in whole] == [r.loss for r in split], placement
+        assert eng.round_idx == 6
+
+
+def test_pipeline_reports_overlap_and_recompiles():
+    eng = _engine(1)
+    res = eng.run(5)
+    assert eng.compile_stats["compiles"] >= 1
+    assert res[-1].recompiles == eng.compile_stats["compiles"]
+    assert all(r.pack_time > 0 for r in res)
+    # rounds after the first had their pack overlapped with execution
+    assert any(r.overlap_fraction > 0 for r in res[1:])
+    assert all(0.0 <= r.overlap_fraction <= 1.0 for r in res)
+
+
+def test_background_prep_failure_preserves_executed_round():
+    """If preparing round t+1 dies on the pack thread, round t (already
+    executed on device) must still be recorded before the error surfaces —
+    otherwise a retrying caller would train round t twice."""
+    eng = _engine(1)
+    orig = eng.sampler.sample
+
+    def boom(t):
+        if t == 2:
+            raise RuntimeError("sampler died")
+        return orig(t)
+
+    eng.sampler.sample = boom
+    with pytest.raises(RuntimeError, match="sampler died"):
+        eng.run(4)
+    assert eng.round_idx == 2
+    assert len(eng.history) == 2
+    assert all(np.isfinite(r.loss) for r in eng.history)
+
+
+def test_engine_defaults_not_shared_across_instances():
+    """Mutable-default regression: two engines must not share strategy or
+    config dataclass instances."""
+    e1, e2 = _engine(0), _engine(0)
+    assert e1.cfg is not e2.cfg
+    assert e1.strategy is not e2.strategy
+    e3 = FederatedEngine(
+        dataset=e1.dataset, loss_fn=e1.loss_fn, init_params=e1.params,
+        optimizer=e1.optimizer, placement=make_placement("rr"),
+        sampler=UniformSampler(64, 4), pool=WorkerPool.homogeneous(1))
+    e4 = FederatedEngine(
+        dataset=e1.dataset, loss_fn=e1.loss_fn, init_params=e1.params,
+        optimizer=e1.optimizer, placement=make_placement("rr"),
+        sampler=UniformSampler(64, 4), pool=WorkerPool.homogeneous(1))
+    assert e3.cfg is not e4.cfg
+    assert e3.strategy is not e4.strategy
+    e3.cfg.steps_cap = 2
+    assert e4.cfg.steps_cap != 2
+
+
+def test_no_post_pack_padding_copy_in_run_round():
+    """The engine must consume packer output as-is: arrays leave the packer
+    already at the bucketed size (acceptance: zero post-pack full copies)."""
+    eng = _engine(0)
+    r = eng.run_round()
+    arrays = eng.history and eng._pack_buffers  # buffers exist and are used
+    assert arrays is not None
+    assert r.s_steps == s_bucket(r.s_steps) or r.s_steps == \
+        eng.cfg.s_bucket_base
+    import inspect
+    src = inspect.getsource(type(eng).run_round) + inspect.getsource(
+        type(eng)._prepare_round)
+    assert "np.pad" not in src
