@@ -11,12 +11,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.aggregation import fedavg_flat, fedmedian, fold_clients
 from repro.simcluster.engine import agg_time
-from repro.simcluster.profiles import (AGG_RATE_FEDAVG, AGG_RATE_FEDMEDIAN,
-                                       TASKS)
+from repro.simcluster.profiles import AGG_RATE_FEDMEDIAN, TASKS
 
 
 def _models(n, kb, seed=0):

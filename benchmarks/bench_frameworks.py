@@ -19,8 +19,10 @@ def run(*, cohort: int = 100, rounds: int = 8) -> list[str]:
             totals = {}
             for fw in FRAMEWORKS:
                 rng = np.random.default_rng(11)
-                sampler = lambda r: [ds.n_batches(int(c)) for c in
-                                     rng.choice(ds.n_clients, size=cohort)]
+
+                def sampler(r):
+                    return [ds.n_batches(int(c)) for c in
+                            rng.choice(ds.n_clients, size=cohort)]
                 res = run_experiment(fw, TASKS[task], cluster, sampler,
                                      rounds=rounds)
                 totals[fw] = res.total_time

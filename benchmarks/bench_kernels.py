@@ -10,7 +10,6 @@ correctness check per shape.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 

@@ -8,13 +8,21 @@ paper's idle-time argument applied to the simulator itself):
   plus the engine's former post-hoc S-bucket ``np.pad`` recopy, vs the
   vectorized packer that allocates at the bucketed size and reuses buffers
   (acceptance: >= 2x).
-* **engine**: end-to-end rounds with ``pipeline_depth`` 0 vs 1 — wall time
-  per round, fraction of the pack hidden under device execution, and the
-  compile-cache recompile count.
+* **engine**: end-to-end rounds with ``pipeline_depth`` 0 vs 1 vs 2 — wall
+  time per round, fraction of the pack hidden under device execution, and
+  the compile-cache recompile count (losses are asserted bit-identical
+  across depths).
+* **device_cache**: a Zipf-skewed sampling workload (hot clients recur)
+  with the HBM batch cache off vs on — hit rate, H2D bytes saved, and the
+  bit-identity of the cached run.  NOTE: on CPU CI host and "device"
+  share memory, so the saved bytes buy no wall time here (the cache costs
+  an extra fused scatter pass); hit rate and bytes/round are the metrics
+  that transfer to accelerators with a real host↔device interconnect.
 
 Emits machine-readable JSON (default ``BENCH_pipeline.json`` at the repo
 root, override with ``POLLEN_BENCH_OUT``) so future PRs get a perf
-trajectory.
+trajectory; ``benchmarks.perf_gate`` compares a fresh run against the
+checked-in JSON in CI and fails the PR on regression.
 """
 
 import json
@@ -94,7 +102,7 @@ def _pack_comparison(*, cohort: int, workers: int, rounds: int) -> dict:
     }
 
 
-def _engine_comparison(*, rounds: int) -> dict:
+def _build_engine(*, depth: int, sampler=None, device_cache: int = 0):
     import jax
 
     from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
@@ -104,27 +112,30 @@ def _engine_comparison(*, rounds: int) -> dict:
     from repro.models.papertasks import make_task_model
     from repro.optim import sgd
 
-    def build(depth):
-        ds = make_federated_dataset("sr", n_clients=256, input_dim=32,
-                                    batch_size=8)
-        params, loss = make_task_model("sr", jax.random.key(0), input_dim=32,
-                                       width=64, n_blocks=2)
-        return FederatedEngine(
-            dataset=ds, loss_fn=loss, init_params=params,
-            optimizer=sgd(0.1, momentum=0.9), placement=make_placement("lb"),
-            sampler=UniformSampler(256, 32),
-            pool=WorkerPool.homogeneous(4, type_name="a40", concurrency=2),
-            telemetry=SyntheticTelemetry(),
-            config=EngineConfig(steps_cap=8, batch_size=8,
-                                pipeline_depth=depth))
+    ds = make_federated_dataset("sr", n_clients=256, input_dim=32,
+                                batch_size=8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=32,
+                                   width=64, n_blocks=2)
+    return FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9), placement=make_placement("lb"),
+        sampler=sampler or UniformSampler(256, 32),
+        pool=WorkerPool.homogeneous(4, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(steps_cap=8, batch_size=8, pipeline_depth=depth,
+                            device_cache_batches=device_cache))
 
+
+def _engine_comparison(*, rounds: int) -> dict:
     out = {}
-    for depth in (0, 1):
-        eng = build(depth)
+    losses = {}
+    for depth in (0, 1, 2):
+        eng = _build_engine(depth=depth)
         eng.run(2)                          # warm compile outside the timing
         t0 = time.perf_counter()
         res = eng.run(rounds)
         wall = time.perf_counter() - t0
+        losses[depth] = [r.loss for r in res]
         out[f"depth{depth}"] = {
             "rounds": rounds,
             "wall_s_per_round": wall / rounds,
@@ -135,8 +146,46 @@ def _engine_comparison(*, rounds: int) -> dict:
             "cache_hits": eng.compile_stats["hits"],
             "final_loss": float(res[-1].loss),
         }
+    # depth is a pure scheduling change: training must be bit-identical
+    assert losses[0] == losses[1] == losses[2], "depths disagree on losses"
     out["pipeline_speedup_x"] = (out["depth0"]["wall_s_per_round"] /
                                  out["depth1"]["wall_s_per_round"])
+    return out
+
+
+def _cache_comparison(*, rounds: int, capacity: int = 768) -> dict:
+    """Zipf-skewed sampling (hot clients recur): HBM batch cache off vs on."""
+    from repro.core import ZipfSampler
+
+    def skew():
+        return ZipfSampler(256, 32, a=1.2)
+
+    out = {}
+    final = {}
+    for tag, cap in (("off", 0), ("on", capacity)):
+        eng = _build_engine(depth=1, sampler=skew(), device_cache=cap)
+        eng.run(4)     # warm the step + gather/assembly shape buckets
+        t0 = time.perf_counter()
+        res = eng.run(rounds)
+        wall = time.perf_counter() - t0
+        final[tag] = [r.loss for r in res]
+        entry = {
+            "rounds": rounds,
+            "wall_s_per_round": wall / rounds,
+            "pack_s_per_round": float(np.mean([r.pack_time for r in res])),
+            "hit_rate": float(np.mean([r.cache_hit_rate for r in res])),
+            "bytes_saved_per_round": float(np.mean(
+                [r.cache_bytes_saved for r in res])),
+        }
+        if cap:
+            entry.update({"capacity_rows": cap, **{
+                k: eng.cache_stats[k]
+                for k in ("hit_steps", "miss_steps", "insertions",
+                          "evictions", "clients_cached")}})
+        out[tag] = entry
+    # the cache replays identical bytes: training must be unchanged
+    assert final["off"] == final["on"], "device cache changed training"
+    assert out["on"]["hit_rate"] > 0.0, out["on"]
     return out
 
 
@@ -145,8 +194,10 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
     pack = _pack_comparison(cohort=cohort, workers=workers,
                             rounds=pack_rounds)
     engine = _engine_comparison(rounds=engine_rounds)
+    cache = _cache_comparison(rounds=engine_rounds)
 
-    record = {"benchmark": "pipeline", "pack": pack, "engine": engine}
+    record = {"benchmark": "pipeline", "pack": pack, "engine": engine,
+              "device_cache": cache}
     out_path = os.environ.get(
         "POLLEN_BENCH_OUT",
         os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json"))
@@ -160,7 +211,7 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
     rows.append(f"bench_pipeline,vectorized_pack_s,"
                 f"{pack['vectorized_pack_s_per_round']:.3f}")
     rows.append(f"bench_pipeline,pack_speedup_x,{pack['speedup_x']:.1f}")
-    for depth in ("depth0", "depth1"):
+    for depth in ("depth0", "depth1", "depth2"):
         e = engine[depth]
         rows.append(f"bench_pipeline,{depth}_wall_s_per_round,"
                     f"{e['wall_s_per_round']:.3f}")
@@ -169,8 +220,17 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
         rows.append(f"bench_pipeline,{depth}_recompiles,{e['recompiles']}")
     rows.append(f"bench_pipeline,pipeline_speedup_x,"
                 f"{engine['pipeline_speedup_x']:.2f}")
+    rows.append(f"bench_pipeline,cache_hit_rate,"
+                f"{cache['on']['hit_rate']:.2f}")
+    rows.append(f"bench_pipeline,cache_bytes_saved_per_round,"
+                f"{cache['on']['bytes_saved_per_round']:.0f}")
     # acceptance: the vectorized pack must at least halve host pack+pad time
     assert pack["speedup_x"] >= 2.0, pack
+    # acceptance: deepening the pipeline never hides LESS of the pack
+    # (same 0.05 slack as benchmarks.perf_gate — both depths saturate near
+    # the same fraction and CI timer noise must not flap either check)
+    assert (engine["depth2"]["overlap_fraction"] >=
+            engine["depth1"]["overlap_fraction"] - 0.05), engine
     return rows
 
 

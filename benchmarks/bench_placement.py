@@ -23,8 +23,10 @@ def run(*, rounds: int = 10, warmup: int = 3) -> list[str]:
         idle = {}
         for fw in ("pollen", "pollen_rr", "pollen_bb"):
             rng = np.random.default_rng(3)
-            sampler = lambda r: [ds.n_batches(int(c)) for c in
-                                 rng.choice(ds.n_clients, size=cohort)]
+
+            def sampler(r):
+                return [ds.n_batches(int(c)) for c in
+                        rng.choice(ds.n_clients, size=cohort)]
             res = run_experiment(fw, TASKS[task], multi_node(), sampler,
                                  rounds=rounds)
             idle[fw] = float(np.mean([s.idle_time

@@ -21,10 +21,11 @@ def run(*, rounds: int = 4, tasks=("tg", "ic")) -> list[str]:
             totals = {}
             for fw in FRAMEWORKS:
                 rng = np.random.default_rng(23)
-                sampler = lambda r: [
-                    ds.n_batches(int(c)) for c in
-                    rng.choice(ds.n_clients, size=cohort,
-                               replace=cohort > ds.n_clients)]
+
+                def sampler(r):
+                    return [ds.n_batches(int(c)) for c in
+                            rng.choice(ds.n_clients, size=cohort,
+                                       replace=cohort > ds.n_clients)]
                 try:
                     res = run_experiment(fw, TASKS[task], multi_node(),
                                          sampler, rounds=rounds)

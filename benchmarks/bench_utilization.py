@@ -16,8 +16,10 @@ def run(*, cohort: int = 100) -> list[str]:
         utils = {}
         for fw in FRAMEWORKS:
             rng = np.random.default_rng(5)
-            sampler = lambda r: [ds.n_batches(int(c)) for c in
-                                 rng.choice(ds.n_clients, size=cohort)]
+
+            def sampler(r):
+                return [ds.n_batches(int(c)) for c in
+                        rng.choice(ds.n_clients, size=cohort)]
             res = run_experiment(fw, TASKS[task], single_node(), sampler,
                                  rounds=2)
             r2 = res.rounds[1]          # second round (skip init effects)

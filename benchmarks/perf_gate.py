@@ -1,0 +1,150 @@
+"""Perf-regression gate for the pipeline benchmark (the CI tripwire).
+
+Compares a fresh ``bench_pipeline`` JSON against the checked-in
+``BENCH_pipeline.json`` and exits non-zero when the PR regressed the host
+data path.  Two kinds of checks:
+
+* **machine-independent** (strict): recompile counts are deterministic and
+  must not grow; pack speedup and overlap fractions are ratios of times
+  measured on the *same* machine in the *same* run, so they transfer across
+  hardware — they get small absolute slacks for timer noise only.  The
+  depth-2-vs-depth-1 overlap ordering is checked within the fresh run.
+* **cross-run timings** (banded): absolute seconds differ wildly between a
+  laptop and a CI runner, so pack s/round only fails outside a generous
+  multiplicative band (``--time-tol``, default 3x) — it catches order-of-
+  magnitude host-path regressions, not scheduler jitter.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.perf_gate BASELINE.json FRESH.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+__all__ = ["compare", "main"]
+
+
+def _get(record: dict, path: str):
+    node = record
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    *,
+    time_tol: float = 3.0,
+    overlap_slack: float = 0.15,
+    hit_rate_slack: float = 0.15,
+) -> list[str]:
+    """Return a list of human-readable failures (empty == gate passes)."""
+    failures: list[str] = []
+
+    def check(cond: bool, msg: str) -> None:
+        if not cond:
+            failures.append(msg)
+
+    def require(path: str):
+        val = _get(fresh, path)
+        check(val is not None, f"fresh run is missing {path!r}")
+        return val
+
+    # -- machine-independent ------------------------------------------------
+    speedup = require("pack.speedup_x")
+    if speedup is not None:
+        check(
+            speedup >= 2.0,
+            f"pack speedup {speedup:.2f}x dropped below the 2x floor",
+        )
+
+    for depth in ("depth1", "depth2"):
+        frac = require(f"engine.{depth}.overlap_fraction")
+        base = _get(baseline, f"engine.{depth}.overlap_fraction")
+        if frac is None or base is None:
+            continue
+        check(
+            frac >= base - overlap_slack,
+            f"{depth} overlap {frac:.2f} regressed vs baseline "
+            f"{base:.2f} (slack {overlap_slack})",
+        )
+    d1 = _get(fresh, "engine.depth1.overlap_fraction")
+    d2 = _get(fresh, "engine.depth2.overlap_fraction")
+    if d1 is not None and d2 is not None:
+        check(
+            d2 >= d1 - 0.05,
+            f"depth2 overlap {d2:.2f} fell below depth1's {d1:.2f}",
+        )
+
+    for depth in ("depth0", "depth1", "depth2"):
+        rec = require(f"engine.{depth}.recompiles")
+        base = _get(baseline, f"engine.{depth}.recompiles")
+        if rec is None or base is None:
+            continue
+        check(
+            rec <= base,
+            f"{depth} recompiles grew: {rec} vs baseline {base}",
+        )
+
+    hit = require("device_cache.on.hit_rate")
+    if hit is not None:
+        check(hit > 0.0, "device cache never hit on the skewed workload")
+        base = _get(baseline, "device_cache.on.hit_rate")
+        if base is not None:
+            check(
+                hit >= base - hit_rate_slack,
+                f"cache hit rate {hit:.2f} regressed vs baseline "
+                f"{base:.2f} (slack {hit_rate_slack})",
+            )
+
+    # -- cross-run timing band ----------------------------------------------
+    pack_s = require("pack.vectorized_pack_s_per_round")
+    base_s = _get(baseline, "pack.vectorized_pack_s_per_round")
+    if pack_s is not None and base_s is not None and base_s > 0:
+        check(
+            pack_s <= base_s * time_tol,
+            f"vectorized pack {pack_s:.3f}s/round is more than "
+            f"{time_tol:.1f}x the baseline {base_s:.3f}s/round",
+        )
+
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="checked-in BENCH_pipeline.json")
+    ap.add_argument("fresh", help="freshly produced benchmark JSON")
+    ap.add_argument("--time-tol", type=float, default=3.0)
+    ap.add_argument("--overlap-slack", type=float, default=0.15)
+    ap.add_argument("--hit-rate-slack", type=float, default=0.15)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = compare(
+        baseline,
+        fresh,
+        time_tol=args.time_tol,
+        overlap_slack=args.overlap_slack,
+        hit_rate_slack=args.hit_rate_slack,
+    )
+    if failures:
+        print(f"perf gate: {len(failures)} regression(s)")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    print("perf gate: PASS (pack/overlap/recompiles/cache within bounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ def main() -> int:
                             bench_scalability, bench_utilization)
 
     table = {
-        "pipeline": (bench_pipeline, "PR1 — pack/pipeline host data path"),
+        "pipeline": (bench_pipeline, "pack / deep pipeline / device cache"),
         "fit": (bench_fit, "Fig. 7 — linear vs log-linear fit SSE"),
         "placement": (bench_placement, "Table 2 — idle time LB vs RR vs BB"),
         "frameworks": (bench_frameworks, "Figs. 8/9 — medium-scale compare"),

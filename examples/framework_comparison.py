@@ -18,8 +18,10 @@ def main():
     for fw in ("pollen", "pollen_rr", "pollen_bb", "parrot", "flower",
                "fedscale", "flute"):
         rng = np.random.default_rng(11)
-        sampler = lambda r: [ds.n_batches(int(c)) for c in
-                             rng.choice(ds.n_clients, size=100)]
+
+        def sampler(r):
+            return [ds.n_batches(int(c)) for c in
+                    rng.choice(ds.n_clients, size=100)]
         res = run_experiment(fw, TASKS["ic"], multi_node(), sampler,
                              rounds=8)
         print(f"{fw:12s} {res.mean_round_time:7.1f}s "

@@ -9,7 +9,7 @@ test scale of the same family.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "FLPlan"]
 

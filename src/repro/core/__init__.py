@@ -11,7 +11,8 @@ from .engine import EngineConfig, FederatedEngine, RoundResult, s_bucket
 from .placement import (Assignment, BatchesBasedPlacement, ClientInfo,
                         LearningBasedPlacement, Placement,
                         RoundRobinPlacement, WorkerInfo, make_placement)
-from .sampling import DeadlineFilter, PowerOfChoiceSampler, UniformSampler
+from .sampling import (DeadlineFilter, PowerOfChoiceSampler, UniformSampler,
+                       ZipfSampler)
 from .telemetry import GPUProfile, SyntheticTelemetry, TelemetryStore
 from .timemodel import (LogLinearFit, TrainingTimeModel, fit_linear,
                         fit_log_linear)
@@ -22,7 +23,7 @@ __all__ = [
     "GPUProfile", "LearningBasedPlacement", "LogLinearFit",
     "PartialAggregate", "Placement", "PowerOfChoiceSampler", "RoundResult",
     "RoundRobinPlacement", "SyntheticTelemetry", "TelemetryStore",
-    "TrainingTimeModel", "UniformSampler", "WorkerInfo",
+    "TrainingTimeModel", "UniformSampler", "WorkerInfo", "ZipfSampler",
     "estimate_slots_analytic", "estimate_slots_from_memory_analysis",
     "fedavg_flat", "fedmedian", "fit_linear", "fit_log_linear",
     "fold_clients", "gpu_concurrency_probe", "make_placement",

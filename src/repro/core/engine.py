@@ -21,14 +21,38 @@ together with TrainingTimeModel's data <= t-2 cutoff — every assignment
 sees the same model regardless of pipeline depth or how run() calls are
 split.
 
-With ``pipeline_depth=1`` (the default) ``run`` overlaps host and device
-(paper §3.2's push-based pipelining applied to the simulator itself): while
-the device executes round t, a background thread samples/places/packs round
-t+1 and starts its ``jax.device_put`` transfers.  Placement for round t+1
-then sees the time model as of the end of round t-1 — exactly the paper's
-rule that the fit for round u uses telemetry from rounds <= u-2, because
-fitting happens while round u-1 trains.  ``pipeline_depth=0`` restores the
-fully synchronous loop.
+Pipelining (``EngineConfig.pipeline_depth``, paper §3.2's push-based
+pipelining applied to the simulator itself):
+
+* ``depth = 0`` — fully synchronous loop;
+* ``depth >= 1`` — a single *producer* thread prepares rounds
+  t+1 .. t+depth (sample → place → pack → async ``device_put``) behind a
+  bounded queue while the consumer executes round t on device.  The
+  producer runs EVERY host-state mutation — pool events, sampler RNG
+  draws, the time-model refit, telemetry draws, and ``placement.observe``
+  — in strict round order on one thread, which is what makes losses (and
+  telemetry) bit-identical across depths: refit for round u always sees
+  exactly the rounds <= u-2 the TrainingTimeModel cutoff asks for, no
+  matter how many rounds are in flight.  Telemetry for round t is
+  *simulated/synthesized from the assignment*, never from device results,
+  so drawing it at prepare time (producer) instead of finish time is
+  side-effect-order-preserving.
+* The host pack buffers form a ring of ``depth + 1`` slot sets
+  (:class:`~repro.data.batching.PackBuffers`): rounds t .. t+depth are in
+  flight at once, and slot k is only rewritten at round t+depth+1 — after
+  round t's device arrays were consumed (the loop syncs on round t's loss
+  before submitting round t+depth+1).
+
+Device-resident client cache (``EngineConfig.device_cache_batches > 0``):
+hot clients' batch rows stay in HBM (:class:`~repro.data.device_cache
+.DeviceBatchCache`) and no full-size host batch buffer exists at all — the
+per-round H2D is one compact ``[n_miss, ...]`` array (plus masks), and a
+single fused device scatter assembles a persistent round base from the
+miss rows and the pool (recycling inserted misses into the pool on the
+way).  A cache-hit client therefore skips the host gather/scatter AND the
+transfer entirely.  The step does not donate its batch input while the
+cache is active (the base must survive it); params and masks still donate.
+Hit-rate and bytes saved surface per round in :class:`RoundResult`.
 
 The number of distinct compiled programs is bounded by bucketing the stream
 length S to the next {1x, 1.5x} power-of-two multiple (beyond-paper
@@ -40,6 +64,7 @@ s = 2^k + 1 — and ~1.2x in expectation for uniformly-landing S).
 from __future__ import annotations
 
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
@@ -48,7 +73,9 @@ import jax
 from repro.core.placement import (Assignment, ClientInfo,
                                   LearningBasedPlacement, Placement)
 from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
-                                 padding_stats)
+                                 build_round_masks, gather_content_rows,
+                                 padding_stats, plan_round)
+from repro.data.device_cache import CachePlan, DeviceBatchCache
 from repro.fl.round import (StepCompileCache, make_gather_round_step,
                             make_round_step)
 from repro.fl.strategy import FedAvg, Strategy
@@ -82,8 +109,10 @@ class RoundResult:
     placement: str
     s_steps: int
     pack_time: float = 0.0         # host time packing this round's arrays
-    overlap_fraction: float = 0.0  # fraction of pack hidden under round t-1
+    overlap_fraction: float = 0.0  # fraction of pack hidden under execution
     recompiles: int = 0            # cumulative step compiles so far
+    cache_hit_rate: float = 0.0    # device-cache step hit rate this round
+    cache_bytes_saved: int = 0     # H2D bytes skipped via the device cache
 
 
 @dataclass
@@ -98,14 +127,27 @@ class EngineConfig:
     grad_clip: float | None = None
     deadline_rho: float = 0.0     # >0 enables over-sample + trim
     seed: int = 1337
-    pipeline_depth: int = 1       # 0 = synchronous; 1 = prep t+1 during t
+    pipeline_depth: int = 1       # 0 = sync; d >= 1 = prep t+1..t+d during t
     compile_cache_size: int = 8   # LRU cap on distinct compiled round steps
     donate_buffers: bool = True   # donate params+batches into the step
+    device_cache_batches: int = 0  # HBM rows pinned for hot clients; 0 = off
+
+    def __post_init__(self):
+        depth = self.pipeline_depth
+        if not isinstance(depth, int) or depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be an int >= 0, got {depth!r}")
+        if self.device_cache_batches < 0:
+            raise ValueError("device_cache_batches must be >= 0, got "
+                             f"{self.device_cache_batches!r}")
+        if self.compile_cache_size < 1:
+            raise ValueError("compile_cache_size must be >= 1, got "
+                             f"{self.compile_cache_size!r}")
 
 
 @dataclass
 class _PreparedRound:
-    """Everything round t needs, produced (possibly on a background thread)
+    """Everything round t needs, produced (possibly on the producer thread)
     before the device is asked to run it."""
 
     t: int
@@ -115,7 +157,10 @@ class _PreparedRound:
     arrays: RoundArrays
     device: tuple            # (batches, step_mask, boundary, weight) on device
     pack_s: float            # host pack time (plan + gather + scatter)
-    overlap_s: float = 0.0   # portion of pack_s hidden under round t-1
+    makespan: float          # simulated round time (drawn at prepare time)
+    idle_time: float
+    overlap_s: float = 0.0   # portion of pack_s hidden under execution
+    cache_plan: CachePlan | None = None
 
 
 class FederatedEngine:
@@ -144,12 +189,22 @@ class FederatedEngine:
         self.eval_fn = eval_fn
         self.round_idx = 0
         self.history: list[RoundResult] = []
-        # The run loop prepares at most ONE round ahead today (depth > 1 is
-        # a ROADMAP item), so cap the buffer ring accordingly — extra slots
-        # would only pin dead full-size host arrays.
-        self._pack_buffers = PackBuffers(
-            depth=min(config.pipeline_depth, 1) + 1)
+        # Rounds t .. t+depth are in flight at once, so the host buffer ring
+        # needs depth+1 slot sets: the producer never rewrites a slot whose
+        # device copy may still be pending.  (EngineConfig.__post_init__
+        # rejects negative depths.)
+        self._pack_buffers = PackBuffers(depth=config.pipeline_depth + 1)
+        self._device_cache = (
+            DeviceBatchCache(config.device_cache_batches,
+                             compile_cache_size=config.compile_cache_size)
+            if config.device_cache_batches > 0 else None)
         donate = "all" if config.donate_buffers else "none"
+        step_donate_argnums = None
+        if self._device_cache is not None and config.donate_buffers:
+            # The batches argument is the cache's persistent device-side
+            # round base, which must survive the step — donate params and
+            # masks only (argnums 0, 2, 3, 4; batches is argnum 1).
+            step_donate_argnums = (0, 2, 3, 4)
         if not strategy.associative:
             # The gather path reuses global_params after the step (the
             # strategy's host-side reduce), so params cannot be donated.
@@ -164,7 +219,8 @@ class FederatedEngine:
                 lambda: make_round_step(loss_fn, optimizer,
                                         agg_impl=config.agg_impl,
                                         grad_clip=config.grad_clip),
-                capacity=config.compile_cache_size, donate=donate)
+                capacity=config.compile_cache_size, donate=donate,
+                donate_argnums=step_donate_argnums)
             self._gather_step = None
             self._step_cache = self._round_step
 
@@ -173,6 +229,11 @@ class FederatedEngine:
     def compile_stats(self) -> dict:
         """Recompile/eviction/hit counters of the round-step cache."""
         return self._step_cache.stats()
+
+    @property
+    def cache_stats(self) -> dict:
+        """Aggregate device-batch-cache counters (empty dict when off)."""
+        return self._device_cache.stats() if self._device_cache else {}
 
     def _s_align(self, s_real: int) -> int:
         return s_bucket(s_real, base=self.cfg.s_bucket_base)
@@ -200,7 +261,12 @@ class FederatedEngine:
 
         With a synthetic source the per-client ground truth reproduces the
         paper's measurement loop; with ``telemetry=None`` we fall back to
-        batch counts as the time proxy.
+        batch counts as the time proxy.  Called from ``_prepare_round`` (the
+        producer thread) so that telemetry draws and ``placement.observe``
+        happen in strict round order regardless of pipeline depth — the
+        simulated times depend only on the assignment, never on device
+        results, so prepare-time recording is order-equivalent to the old
+        finish-time recording.
         """
         by_wid = {w.wid: w for w in workers}
         loads: dict[int, float] = {}
@@ -223,70 +289,102 @@ class FederatedEngine:
 
     # -- the pipeline stages ---------------------------------------------------
     def _prepare_round(self, t: int) -> _PreparedRound:
-        """Host-side producer: sample, place, pack, start the H2D transfer.
+        """Host-side producer: sample, place, record telemetry, pack, start
+        the H2D transfer.
 
-        Runs on the pipeline's background thread for round t+1 while the
-        device executes round t; it must not touch state the consumer half
-        mutates (telemetry records, the time-model fit) — the run loop joins
-        it before recording telemetry.
+        Runs on the pipeline's single producer thread for rounds t+1..t+depth
+        while the device executes round t.  EVERY host-state mutation lives
+        here (pool events, sampler RNG, refit, telemetry, device-cache LRU),
+        so the mutation order is the round order whatever the depth — the
+        consumer half only touches params, the step cache, device pools and
+        the results list.
         """
         tp0 = time.perf_counter()
         self.pool.advance_to(t)
         workers = self.pool.snapshot()
         if isinstance(self.placement, LearningBasedPlacement):
             # The paper's protocol, literally: the fit for round t runs
-            # while round t-1 trains (here: on the pack thread, during the
-            # previous round's device execution) and TrainingTimeModel
+            # while earlier rounds train (here: on the pack thread, during
+            # the in-flight rounds' device execution) and TrainingTimeModel
             # enforces the data <= t-2 cutoff.  Fitting here — not in the
             # consumer tail — makes the model any assignment sees identical
             # across pipeline depths and across split run() calls.
             self.placement.refit(t)
         clients = self._cohort(t)
         assignment = self.placement.assign(clients, workers)
-        arrays = build_round_arrays(
-            self.dataset, assignment, workers,
-            lanes_per_worker=self.cfg.lanes_per_worker,
-            steps_cap=self.cfg.steps_cap, batch_size=self.cfg.batch_size,
-            seq_len=self.cfg.seq_len, min_steps=1,
-            s_align=self._s_align, buffers=self._pack_buffers)
+        makespan, idle = self._record_telemetry(t, assignment, workers)
+        plan = plan_round(assignment, workers,
+                          lanes_per_worker=self.cfg.lanes_per_worker,
+                          steps_cap=self.cfg.steps_cap, min_steps=1)
+        cache_plan = None
+        if self._device_cache is not None:
+            # Cache path: no full-size host batch buffer exists at all —
+            # masks are built host-side as usual, but content travels as a
+            # compact [n_miss, ...] array and the device assembles the
+            # round from it (misses + pool hits) in _execute.
+            S = self._s_align(plan.s_real)
+            cache_plan = self._device_cache.plan(plan, S, t)
+            arrays = build_round_masks(plan, S, buffers=self._pack_buffers)
+            host_batches = gather_content_rows(
+                self.dataset, plan, cache_plan.content_mask,
+                cache_plan.n_miss_rows, batch_size=self.cfg.batch_size,
+                seq_len=self.cfg.seq_len, buffers=self._pack_buffers)
+        else:
+            arrays = build_round_arrays(
+                self.dataset, plan=plan,
+                batch_size=self.cfg.batch_size, seq_len=self.cfg.seq_len,
+                s_align=self._s_align, buffers=self._pack_buffers)
+            host_batches = arrays.batches
         pack_s = time.perf_counter() - tp0
         # Explicit async H2D: transfers overlap the in-flight round's compute.
-        device = (jax.device_put(arrays.batches),
+        # (Cache path: host_batches is the compact miss transfer only.)
+        device = (jax.device_put(host_batches),
                   jax.device_put(arrays.step_mask),
                   jax.device_put(arrays.boundary),
                   jax.device_put(arrays.weight))
         return _PreparedRound(t=t, clients=clients, workers=workers,
                               assignment=assignment, arrays=arrays,
-                              device=device, pack_s=pack_s)
+                              device=device, pack_s=pack_s,
+                              makespan=makespan, idle_time=idle,
+                              cache_plan=cache_plan)
 
     def _execute(self, prep: _PreparedRound):
         """Dispatch the compiled round step (async); returns metrics."""
+        batches, step_mask, boundary, weight = prep.device
+        if self._device_cache is not None and prep.cache_plan is not None:
+            # batches arrived as compact miss rows: one fused device pass
+            # scatters them into the persistent round base, recycles
+            # inserted clients into the HBM pool, and fills hits from it.
+            batches = self._device_cache.apply(batches, prep.cache_plan)
         if self.strategy.associative:
-            new_params, metrics = self._round_step(self.params, *prep.device)
+            new_params, metrics = self._round_step(
+                self.params, batches, step_mask, boundary, weight)
             self.params = new_params
         else:
-            stacked, ws, metrics = self._gather_step(self.params, *prep.device)
+            stacked, ws, metrics = self._gather_step(
+                self.params, batches, step_mask, boundary, weight)
             self.params = self.strategy.reduce(stacked, ws, self.params)
         return metrics
 
     def _finish(self, prep: _PreparedRound, metrics, t0: float) -> RoundResult:
-        """Consumer tail: telemetry, result bookkeeping, periodic
-        checkpoint.  (The time-model refit lives in ``_prepare_round``.)"""
+        """Consumer tail: result bookkeeping and periodic checkpoint.  (The
+        time-model refit AND telemetry recording live in ``_prepare_round``.)"""
         t = prep.t
         loss = float(metrics.loss)             # device sync point
-        makespan, idle = self._record_telemetry(t, prep.assignment,
-                                                prep.workers)
         stats = padding_stats(prep.arrays)
+        cp = prep.cache_plan
         result = RoundResult(
             round_idx=t, loss=loss, n_clients=len(prep.clients),
-            makespan=makespan, idle_time=idle,
+            makespan=prep.makespan, idle_time=prep.idle_time,
             useful_fraction=stats["useful_fraction"],
             wall_time=time.perf_counter() - t0,
             placement=self.placement.name, s_steps=prep.arrays.n_steps,
             pack_time=prep.pack_s,
             overlap_fraction=(prep.overlap_s / prep.pack_s
                               if prep.pack_s > 0 else 0.0),
-            recompiles=self._step_cache.compiles)
+            recompiles=self._step_cache.compiles,
+            cache_hit_rate=cp.hit_rate if cp is not None else 0.0,
+            cache_bytes_saved=cp.bytes_saved if cp is not None else 0)
         self.history.append(result)
         self.round_idx = t + 1
 
@@ -298,44 +396,116 @@ class FederatedEngine:
     def run_round(self) -> RoundResult:
         """One fully synchronous round (also the ``pipeline_depth=0`` path)."""
         t0 = time.perf_counter()
-        prep = self._prepare_round(self.round_idx)
-        metrics = self._execute(prep)
+        try:
+            prep = self._prepare_round(self.round_idx)
+            metrics = self._execute(prep)
+        except BaseException:
+            # A prep that died between cache.plan and cache.apply left LRU
+            # entries whose pool rows were never written — a retry would
+            # serve them as bogus hits.
+            if self._device_cache is not None:
+                self._device_cache.invalidate()
+            raise
         return self._finish(prep, metrics, t0)
 
     def _run_pipelined(self, n_rounds: int, *, log_every: int = 0) -> list[RoundResult]:
-        """Producer/consumer round loop: round t+1's host work (sample →
-        place → pack → device_put) runs on a background thread while round t
-        executes on device.  The future is joined *before* telemetry is
-        recorded, so the background refit/placement never runs concurrently
-        with ``placement.observe`` — results are deterministic, and the
-        model any round's assignment sees follows the paper's data <= t-2
-        recency rule."""
+        """Bounded producer/consumer round loop: while round t executes on
+        device, a single producer thread prepares rounds t+1 .. t+depth
+        (sample → place → telemetry → pack → device_put), at most ``depth``
+        ahead.  Every host-state mutation happens on the producer in strict
+        round order, so results are bit-identical across depths (and across
+        split ``run()`` calls); the consumer only advances params, the
+        compile/device caches, and the history.
+
+        Overlap accounting: a prep's hidden fraction is 1 - (consumer stall
+        waiting for it) / (its pack time) — at depth 1 this reproduces the
+        old min(pack, exec)/pack metric, and it generalizes to preps that
+        overlap several rounds' executions.
+
+        If an in-flight prep (or the device step itself) raises, every
+        round already executed on device is booked in ``history`` before
+        the error surfaces (a retrying caller must not train a round
+        twice).  Queued preps are cancelled or stopped at the abort guard
+        below, so at most the prep already running consumes host state for
+        a round that never executes.  (The failing prep itself may also
+        have consumed some; restore from a checkpoint for an exact resume
+        after a pipeline error.)"""
+        try:
+            return self._run_pipelined_inner(n_rounds, log_every=log_every)
+        except BaseException:
+            # Any failure can leave preps that planned cache insertions
+            # whose pool rows were never written (plan runs producer-side,
+            # apply consumer-side) — a retry would serve them as bogus
+            # hits.  Executed rounds were already booked by the inner loop.
+            if self._device_cache is not None:
+                self._device_cache.invalidate()
+            raise
+
+    def _run_pipelined_inner(self, n_rounds: int, *,
+                             log_every: int = 0) -> list[RoundResult]:
         out: list[RoundResult] = []
         first = self.round_idx
         last = first + n_rounds - 1
+        depth = self.cfg.pipeline_depth
+        queue: deque = deque()
+        aborted = False
+
+        def guarded_prep(t):
+            # Runs on the single producer thread, strictly in round order:
+            # once one prep raises, the flag (set producer-side, before the
+            # consumer even observes the failure) stops every later queued
+            # prep from mutating host state (RNG, telemetry, cache LRU)
+            # for rounds that will never execute.
+            nonlocal aborted
+            if aborted:
+                raise RuntimeError(f"pipeline aborted before round {t} prep")
+            try:
+                return self._prepare_round(t)
+            except BaseException:
+                aborted = True
+                raise
+
         with ThreadPoolExecutor(max_workers=1,
                                 thread_name_prefix="pollen-pack") as pool:
-            prep = self._prepare_round(first)
+            prep = self._prepare_round(first)   # nothing to overlap with yet
+            next_t = first + 1
             for t in range(first, last + 1):
                 t0 = time.perf_counter()
-                fut = (pool.submit(self._prepare_round, t + 1)
-                       if t < last else None)
-                metrics = self._execute(prep)
-                loss = float(metrics.loss)     # noqa: F841 — device sync
-                exec_s = time.perf_counter() - t0
+                while next_t <= min(t + depth, last):
+                    queue.append(pool.submit(guarded_prep, next_t))
+                    next_t += 1
+                try:
+                    metrics = self._execute(prep)
+                    float(metrics.loss)        # device sync point
+                except BaseException:
+                    # Device-step failure: stop the producer too, or rounds
+                    # t+1..t+depth would keep consuming sampler RNG and
+                    # telemetry for rounds that will never execute.  (The
+                    # prep already in flight still completes; queued ones
+                    # stop at the guard.)
+                    aborted = True
+                    for fut in queue:
+                        fut.cancel()
+                    raise
                 next_prep, prep_err = None, None
-                if fut is not None:
+                if queue:
+                    w0 = time.perf_counter()
                     try:
-                        next_prep = fut.result()
+                        next_prep = queue.popleft().result()
                     except Exception as e:     # noqa: BLE001
                         # Round t already executed — book it before raising,
                         # or a retrying caller would train round t twice.
                         prep_err = e
-                if next_prep is not None:
-                    next_prep.overlap_s = min(next_prep.pack_s, exec_s)
+                    wait_s = time.perf_counter() - w0
+                    if next_prep is not None:
+                        next_prep.overlap_s = min(
+                            next_prep.pack_s,
+                            max(0.0, next_prep.pack_s - wait_s))
                 r = self._finish(prep, metrics, t0)
                 out.append(r)
                 if prep_err is not None:
+                    for fut in queue:
+                        fut.cancel()
                     raise prep_err
                 if log_every and r.round_idx % log_every == 0:
                     self._log_round(r)
@@ -357,19 +527,30 @@ class FederatedEngine:
 
     @staticmethod
     def _log_round(r: RoundResult) -> None:
+        cache = (f" cache={r.cache_hit_rate:.0%}"
+                 if (r.cache_hit_rate or r.cache_bytes_saved) else "")
         print(f"round {r.round_idx:5d} loss={r.loss:.4f} "
               f"clients={r.n_clients} S={r.s_steps} "
               f"useful={r.useful_fraction:.2%} idle={r.idle_time:.1f}s "
               f"pack={r.pack_time * 1e3:.0f}ms "
-              f"overlap={r.overlap_fraction:.0%}")
+              f"overlap={r.overlap_fraction:.0%}" + cache)
 
     # -- fault tolerance -------------------------------------------------------
     def save_checkpoint(self) -> None:
         extra = {"round": self.round_idx}
         if isinstance(self.placement, LearningBasedPlacement):
+            # Only rows of rounds already BOOKED: with pipeline_depth >= 1
+            # the producer may have recorded telemetry for in-flight rounds
+            # beyond round_idx; those rounds re-run (and re-record) after a
+            # restore, so persisting them would duplicate rows and skew the
+            # resumed fit.  Rows <= round_idx - 1 are complete and stable by
+            # the time the consumer checkpoints.  Snapshot models.items()
+            # and each row list once — the producer may concurrently add a
+            # model for a newly joined worker type or append newer rows
+            # (the round filter excludes the latter).
             extra["telemetry"] = {
-                t: [list(r) for r in m._xs]
-                for t, m in self.placement.models.items()}
+                t: [list(r) for r in list(m._xs) if r[0] < self.round_idx]
+                for t, m in list(self.placement.models.items())}
         self.ckpt.save(self.round_idx, self.params, extra=extra)
 
     def restore_latest(self) -> bool:
@@ -378,6 +559,10 @@ class FederatedEngine:
         params, rnd, extra = self.ckpt.restore(self.params)
         self.params = params
         self.round_idx = rnd
+        if self._device_cache is not None:
+            # Cache state is not checkpointed; entries planned for rounds
+            # past the restore point must not survive as hits.
+            self._device_cache.invalidate()
         if isinstance(self.placement, LearningBasedPlacement) and "telemetry" in extra:
             for tname, rows in extra["telemetry"].items():
                 m = self.placement._model(tname)

@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["UniformSampler", "PowerOfChoiceSampler", "DeadlineFilter"]
+__all__ = ["UniformSampler", "ZipfSampler", "PowerOfChoiceSampler",
+           "DeadlineFilter"]
 
 
 class UniformSampler:
@@ -33,6 +34,34 @@ class UniformSampler:
         """Sample client ids for a round (paper: 0.1% of population)."""
         return self.rng.choice(self.population, size=self.cohort_size,
                                replace=self.with_replacement)
+
+
+class ZipfSampler:
+    """Popularity-skewed sampling: client k is drawn with probability
+    proportional to ``(k+1)**-a``.
+
+    Real FL availability is heavy-tailed (the same devices come back round
+    after round); uniform sampling never re-draws a client often enough for
+    a hot-client cache to matter.  This sampler reproduces that recurrence
+    structure — it is the benchmark workload for the engine's
+    device-resident batch cache.
+    """
+
+    def __init__(self, population: int, cohort_size: int, *, a: float = 1.2,
+                 seed: int = 1337):
+        if cohort_size <= 0:
+            raise ValueError("cohort_size must be positive")
+        self.population = population
+        self.cohort_size = cohort_size
+        ranks = np.arange(1, population + 1, dtype=np.float64)
+        weights = ranks ** -float(a)
+        self.p = weights / weights.sum()
+        self.rng = np.random.default_rng(seed)
+        self.with_replacement = cohort_size > population
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        return self.rng.choice(self.population, size=self.cohort_size,
+                               replace=self.with_replacement, p=self.p)
 
 
 class PowerOfChoiceSampler:

@@ -2,8 +2,9 @@ from .federated import FederatedDataset, TASK_DISTRIBUTIONS, make_federated_data
 from .batching import (PackBuffers, RoundArrays, RoundPlan,
                        build_round_arrays, build_round_arrays_loop,
                        lane_split, padding_stats, plan_round)
+from .device_cache import CachePlan, DeviceBatchCache
 
 __all__ = ["FederatedDataset", "TASK_DISTRIBUTIONS", "make_federated_dataset",
            "PackBuffers", "RoundArrays", "RoundPlan", "build_round_arrays",
            "build_round_arrays_loop", "lane_split", "padding_stats",
-           "plan_round"]
+           "plan_round", "CachePlan", "DeviceBatchCache"]

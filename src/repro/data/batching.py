@@ -31,13 +31,13 @@ tested bit-identical against.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 __all__ = ["build_round_arrays", "build_round_arrays_loop", "RoundArrays",
            "RoundPlan", "PackBuffers", "plan_round", "padding_stats",
-           "lane_split"]
+           "lane_split", "build_round_masks", "gather_content_rows"]
 
 
 @dataclass
@@ -97,6 +97,8 @@ class RoundPlan:
     b_p: np.ndarray             # [C] boundary lane rows
     b_s: np.ndarray             # [C] boundary stream positions (last step)
     b_weight: np.ndarray        # [C] f32 client aggregation weights
+    b_cid: np.ndarray           # [C] client id of each placed client
+    b_nb: np.ndarray            # [C] steps (capped batches) of each client
 
     @property
     def n_steps_total(self) -> int:
@@ -148,7 +150,8 @@ def plan_round(assignment, workers, *, lanes_per_worker: int = 1,
         w_idx=np.repeat(c_w, c_nb), p_idx=np.repeat(c_p, c_nb),
         s_idx=np.repeat(c_start, c_nb) + within,
         cids=np.repeat(c_cid, c_nb), batch_idx=within,
-        b_w=c_w, b_p=c_p, b_s=c_start + c_nb - 1, b_weight=c_weight)
+        b_w=c_w, b_p=c_p, b_s=c_start + c_nb - 1, b_weight=c_weight,
+        b_cid=c_cid, b_nb=c_nb)
 
 
 class PackBuffers:
@@ -165,6 +168,10 @@ class PackBuffers:
     def __init__(self, depth: int = 2):
         self.depth = max(1, int(depth))
         self._rings: dict = {}   # key -> (slots list, cursor)
+        # (batch_size, seq_len) -> [(name, row_shape, dtype)]: remembered
+        # batch-leaf specs, so a round whose content is served entirely by
+        # the device cache does not even probe the dataset for shapes.
+        self.row_memo: dict = {}
 
     def acquire(self, W: int, S: int, mask_shape, leaf_specs):
         """Return (batches dict, step_mask, boundary, weight) buffers."""
@@ -204,37 +211,50 @@ def _batch_content(dataset, cids, batch_idx, *, batch_size, seq_len) -> dict:
     return {name: np.stack(v) for name, v in rows.items()}
 
 
-def build_round_arrays(dataset, assignment, workers, *,
+def build_round_arrays(dataset, assignment=None, workers=None, *,
                        lanes_per_worker: int = 1,
                        steps_cap: int | None = None,
                        batch_size: int | None = None,
                        seq_len: int | None = None, min_steps: int = 1,
                        s_align=None,
-                       buffers: PackBuffers | None = None) -> RoundArrays:
+                       buffers: PackBuffers | None = None,
+                       plan: RoundPlan | None = None) -> RoundArrays:
     """Materialize padded [W, P, S, ...] stream arrays for an assignment.
 
     ``s_align``: optional ``f(s_real) -> S`` (e.g. the engine's s_bucket) —
     arrays are allocated at the aligned size directly, so no padding copy
     ever happens downstream.  ``buffers``: optional :class:`PackBuffers` to
-    reuse host allocations across rounds.
+    reuse host allocations across rounds.  ``plan``: optional precomputed
+    :class:`RoundPlan`; when given, ``assignment``/``workers`` are ignored.
+    (The engine's device-cache path does not use this full packer at all —
+    see :func:`build_round_masks` + :func:`gather_content_rows`.)
     """
-    plan = plan_round(assignment, workers, lanes_per_worker=lanes_per_worker,
-                      steps_cap=steps_cap, min_steps=min_steps)
+    if plan is None:
+        plan = plan_round(assignment, workers,
+                          lanes_per_worker=lanes_per_worker,
+                          steps_cap=steps_cap, min_steps=min_steps)
     S = int(s_align(plan.s_real)) if s_align is not None else plan.s_real
     if S < plan.s_real:
         raise ValueError(f"s_align shrank S: {S} < {plan.s_real}")
     W, P = plan.W, plan.P
 
-    vals = _batch_content(dataset, plan.cids, plan.batch_idx,
-                          batch_size=batch_size, seq_len=seq_len)
+    row_specs = (buffers.row_memo.get((batch_size, seq_len))
+                 if buffers is not None else None)
     if plan.n_steps_total:
-        leaf_specs = [(name, (W, P, S) + arr.shape[1:], arr.dtype)
-                      for name, arr in vals.items()]
-    else:   # empty round: probe one batch for leaf shapes/dtypes
-        sample = dataset.client_batch(0, 0, batch_size=batch_size,
-                                      seq_len=seq_len)
-        leaf_specs = [(name, (W, P, S) + np.shape(arr),
-                       np.asarray(arr).dtype) for name, arr in sample.items()]
+        vals = _batch_content(dataset, plan.cids, plan.batch_idx,
+                              batch_size=batch_size, seq_len=seq_len)
+        row_specs = [(name, tuple(arr.shape[1:]), arr.dtype)
+                     for name, arr in vals.items()]
+    else:
+        vals = {}
+        if row_specs is None:   # probe one batch for leaf shapes/dtypes
+            sample = dataset.client_batch(0, 0, batch_size=batch_size,
+                                          seq_len=seq_len)
+            row_specs = [(name, tuple(np.shape(arr)), np.asarray(arr).dtype)
+                         for name, arr in sample.items()]
+    if buffers is not None:
+        buffers.row_memo[(batch_size, seq_len)] = row_specs
+    leaf_specs = [(name, (W, P, S) + sh, dt) for name, sh, dt in row_specs]
 
     if buffers is not None:
         batches, step_mask, boundary, weight = buffers.acquire(
@@ -255,6 +275,72 @@ def build_round_arrays(dataset, assignment, workers, *,
 
     return RoundArrays(batches=batches, step_mask=step_mask, boundary=boundary,
                        weight=weight, n_steps=S, n_real_steps=plan.s_real)
+
+
+def build_round_masks(plan: RoundPlan, S: int, *,
+                      buffers: PackBuffers | None = None) -> RoundArrays:
+    """Masks-only round arrays (``batches == {}``) for the device-cache
+    path: batch *content* travels as compact miss rows
+    (:func:`gather_content_rows`) and is assembled on device, so no
+    full-size host batch buffer is ever allocated or transferred."""
+    if S < plan.s_real:
+        raise ValueError(f"S shrank below s_real: {S} < {plan.s_real}")
+    W, P = plan.W, plan.P
+    if buffers is not None:
+        _, step_mask, boundary, weight = buffers.acquire(W, S, (W, P, S), [])
+    else:
+        step_mask = np.zeros((W, P, S), dtype=np.float32)
+        boundary = np.zeros((W, P, S), dtype=np.float32)
+        weight = np.zeros((W, P, S), dtype=np.float32)
+    if plan.n_steps_total:
+        step_mask[plan.w_idx, plan.p_idx, plan.s_idx] = 1.0
+        boundary[plan.b_w, plan.b_p, plan.b_s] = 1.0
+        weight[plan.b_w, plan.b_p, plan.b_s] = plan.b_weight
+    return RoundArrays(batches={}, step_mask=step_mask, boundary=boundary,
+                       weight=weight, n_steps=S, n_real_steps=plan.s_real)
+
+
+def gather_content_rows(dataset, plan: RoundPlan, sel, n_rows: int, *,
+                        batch_size: int | None = None,
+                        seq_len: int | None = None,
+                        buffers: PackBuffers | None = None) -> dict:
+    """Compact ``{name: [n_rows, ...]}`` content for the selected steps.
+
+    ``sel``: bool [N] step mask (None = every step); rows keep plan-step
+    order.  The request is padded host-side to exactly ``n_rows`` (cids 0 /
+    batch 0) BEFORE hitting the dataset, so the bulk-gather jit sees the
+    same pow2-bucketed shape the caller's scatter uses — round-to-round
+    variation in the selected count never compiles a new gather program.
+    Padding rows carry dummy content; the device-side scatter drops them
+    via out-of-bounds destinations.  With ``buffers``, leaf shapes for an
+    all-padding result come from ``row_memo`` instead of a dataset probe.
+    """
+    cids = plan.cids if sel is None else plan.cids[sel]
+    bidx = plan.batch_idx if sel is None else plan.batch_idx[sel]
+    if cids.size > n_rows:
+        raise ValueError(f"{cids.size} selected steps exceed n_rows={n_rows}")
+    row_specs = (buffers.row_memo.get((batch_size, seq_len))
+                 if buffers is not None else None)
+    if cids.size:
+        pad = n_rows - cids.size
+        if pad:
+            cids = np.concatenate([cids, np.zeros(pad, cids.dtype)])
+            bidx = np.concatenate([bidx, np.zeros(pad, bidx.dtype)])
+        out = _batch_content(dataset, cids, bidx,
+                             batch_size=batch_size, seq_len=seq_len)
+        row_specs = [(name, tuple(arr.shape[1:]), arr.dtype)
+                     for name, arr in out.items()]
+    else:
+        if row_specs is None:
+            sample = dataset.client_batch(0, 0, batch_size=batch_size,
+                                          seq_len=seq_len)
+            row_specs = [(name, tuple(np.shape(arr)), np.asarray(arr).dtype)
+                         for name, arr in sample.items()]
+        out = {name: np.zeros((n_rows,) + sh, dt)
+               for name, sh, dt in row_specs}
+    if buffers is not None:
+        buffers.row_memo[(batch_size, seq_len)] = row_specs
+    return out
 
 
 def build_round_arrays_loop(dataset, assignment, workers, *,

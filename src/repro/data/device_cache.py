@@ -1,0 +1,361 @@
+"""Device-resident client batch cache (HBM hot-set for the round packer).
+
+Client datasets are static across rounds, yet a hot client re-sampled in
+round t+k normally pays the host gather, the host scatter AND the full H2D
+transfer again for identical bytes.  With this cache the engine never
+uploads a full ``[W, P, S, ...]`` batch buffer at all:
+
+* the host gathers only the round's **miss** steps, as one compact
+  ``[n_miss, b, ...]`` array per leaf (:func:`~repro.data.batching
+  .gather_content_rows`) — the only per-round content H2D;
+* a persistent device-side **round base** per (W, P, S, leaf-signature)
+  holds the assembled batches; one fused, donated scatter writes the miss
+  rows at their slots, recycles inserted clients' rows into the **pool**
+  (an ``[R, b, ...]`` device array per leaf, R = ``capacity_rows`` =
+  ``EngineConfig.device_cache_batches``), and fills **hit** clients' slots
+  straight from the pool — hit content never touches the host or the bus;
+* eviction is pure host bookkeeping (rows return to the free list).
+
+Because the round base must survive the training step, the engine disables
+batch-buffer donation into the step while the cache is active (params and
+masks still donate).  Pool rows hold exactly the bytes the host path would
+have transferred, so training is bit-identical with the cache on or off.
+
+Thread affinity (the engine's producer/consumer split): :meth:`plan`
+mutates the LRU metadata and runs only on the pack (producer) thread, in
+strict round order — cache decisions are deterministic for a given run;
+:meth:`apply` touches the device arrays and runs only on the consumer
+thread.  The assembly program is jitted through the engine's counted
+:class:`~repro.fl.round.StepCompileCache` (explicit ``donate_argnums``),
+with index lengths padded to powers of two using out-of-bounds sentinels
+(``mode="drop"``) so distinct compiled programs stay O(log max_steps).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DeviceBatchCache", "CachePlan"]
+
+_MAX_BASES = 4  # round bases kept per cache (distinct (W, P, S) shapes)
+
+
+def _assemble_round(base, miss, pool, miss_dst, ins_src, ins_dst, hit_src, hit_dst):
+    """One fused device pass: miss scatter + pool insert + hit scatter.
+
+    ``base`` (the persistent round buffer) and ``pool`` are donated — both
+    update in place.  All index vectors are pow2-padded; padded entries
+    carry out-of-bounds destinations and are dropped.
+    """
+    out, new_pool = {}, {}
+    for name, b in base.items():
+        rows = miss[name]
+        flat = b.reshape((-1,) + rows.shape[1:])
+        updated_pool = pool[name].at[ins_dst].set(rows[ins_src], mode="drop")
+        flat = flat.at[miss_dst].set(rows, mode="drop")
+        flat = flat.at[hit_dst].set(updated_pool[hit_src], mode="drop")
+        out[name] = flat.reshape(b.shape)
+        new_pool[name] = updated_pool
+    return out, new_pool
+
+
+def _row_signature(rows: dict) -> tuple:
+    items = ((n, tuple(a.shape[1:]), str(a.dtype)) for n, a in rows.items())
+    return tuple(sorted(items))
+
+
+def _cat(parts: list) -> np.ndarray:
+    if not parts:
+        return np.zeros(0, dtype=np.int64)
+    return np.concatenate(parts).astype(np.int64)
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pad_idx(idx: np.ndarray, n: int, fill: int):
+    """Pad an index vector to length ``n`` with ``fill`` (an OOB sentinel
+    for destinations, a valid row 0 for sources)."""
+    pad = n - int(idx.shape[0])
+    if pad:
+        idx = np.concatenate([idx, np.full(pad, fill, np.int64)])
+    return jnp.asarray(idx.astype(np.int32))
+
+
+@dataclass
+class _Entry:
+    rows: np.ndarray  # [nb] pool row indices, ordered by batch_idx
+    nb: int
+    last_round: int
+
+
+@dataclass
+class CachePlan:
+    """One round's cache instructions, produced by :meth:`plan` on the pack
+    thread and executed by :meth:`apply` on the consumer thread."""
+
+    round_idx: int
+    W: int
+    P: int
+    S: int
+    content_mask: np.ndarray | None  # [N] bool: steps the host must gather
+    n_miss_rows: int  # pow2 row count of the compact miss transfer
+    miss_dst: np.ndarray  # [n_miss] flat round slots of the miss rows
+    ins_src: np.ndarray  # [Ni] compact-miss row index to recycle
+    ins_dst: np.ndarray  # [Ni] pool rows to write
+    hit_src: np.ndarray  # [Nh] pool rows to read
+    hit_dst: np.ndarray  # [Nh] flat round slots to fill
+    hit_steps: int = 0
+    miss_steps: int = 0
+    hit_clients: int = 0
+    miss_clients: int = 0
+    inserted_clients: int = 0
+    evicted_clients: int = 0
+    bytes_saved: int = 0  # filled by apply() (needs leaf dtypes)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hit_steps + self.miss_steps
+        return self.hit_steps / total if total else 0.0
+
+
+class DeviceBatchCache:
+    """LRU of hot clients' batch rows, resident in device memory.
+
+    ``capacity_rows`` bounds the pool: exactly that many batch rows per
+    leaf, allocated lazily on the first round.  A client whose ``nb``
+    exceeds the capacity is never cached.  Entries are keyed by client id
+    (with the round's ``nb`` validated on lookup — a mismatch is a miss);
+    the batch leaf signature is global to the cache, and changing it under
+    a live cache raises (one engine = one batch shape config).  Up to
+    ``_MAX_BASES`` persistent round bases are kept (S-bucketing keeps the
+    distinct shapes O(log S)); the least-recent is dropped beyond that.
+    """
+
+    def __init__(self, capacity_rows: int, *, compile_cache_size: int = 32):
+        # Deferred import: repro.fl.round reaches back into repro.core (and
+        # from there repro.data), so a module-level import would cycle when
+        # ``repro.data`` is the entry point.
+        from repro.fl.round import StepCompileCache
+
+        if capacity_rows <= 0:
+            raise ValueError(f"capacity_rows must be positive, got {capacity_rows}")
+        self.capacity = int(capacity_rows)
+        self._entries: OrderedDict[int, _Entry] = OrderedDict()
+        self._free: list[int] = list(range(self.capacity - 1, -1, -1))
+        self._pools: dict | None = None
+        self._bases: OrderedDict[tuple, dict] = OrderedDict()
+        self._rowsig: tuple | None = None
+        self._row_bytes = 0
+        self._asm_cache = StepCompileCache(
+            lambda: _assemble_round,
+            capacity=compile_cache_size,
+            donate_argnums=(0, 2),  # base + pool update in place
+        )
+        self.totals = {
+            "hit_steps": 0,
+            "miss_steps": 0,
+            "hit_clients": 0,
+            "miss_clients": 0,
+            "insertions": 0,
+            "evictions": 0,
+            "bytes_saved": 0,
+            "rounds": 0,
+        }
+
+    # -- producer side (pack thread, strict round order) --------------------
+    def plan(self, rplan, S: int, round_idx: int) -> CachePlan:
+        """Decide hits/insertions/evictions for one round's :class:`RoundPlan`.
+
+        Mutates only host-side LRU metadata; call from the pack thread, in
+        round order.  ``S`` is the post-bucket stream length the round's
+        device arrays will use (it defines the flat slot indices).
+        """
+        C = rplan.n_clients
+        P = rplan.P
+        M = rplan.W * P * S
+        flat_steps = (rplan.w_idx * P + rplan.p_idx) * S + rplan.s_idx  # [N]
+        starts = np.cumsum(rplan.b_nb) - rplan.b_nb  # [C] plan-step offsets
+        hit_sel = np.zeros(C, dtype=bool)
+        hit_src: list[np.ndarray] = []
+        hit_dst: list[np.ndarray] = []
+        for i in range(C):
+            cid, nb = int(rplan.b_cid[i]), int(rplan.b_nb[i])
+            ent = self._entries.get(cid)
+            if ent is not None and ent.nb == nb:
+                hit_sel[i] = True
+                ent.last_round = round_idx
+                self._entries.move_to_end(cid)
+                hit_src.append(ent.rows)
+                hit_dst.append(flat_steps[starts[i] : starts[i] + nb])
+
+        if C:
+            step_hit = np.repeat(hit_sel, rplan.b_nb)
+        else:
+            step_hit = np.zeros(0, dtype=bool)
+        n_hit_steps = int(step_hit.sum())
+        miss_sel = ~step_hit
+        comp_pos = np.cumsum(miss_sel) - 1  # plan step -> compact miss row
+
+        ins_src: list[np.ndarray] = []
+        ins_dst: list[np.ndarray] = []
+        evicted = 0
+        seen: set[int] = set()
+        for i in np.flatnonzero(~hit_sel):
+            cid, nb = int(rplan.b_cid[i]), int(rplan.b_nb[i])
+            if cid in seen or nb > self.capacity:
+                continue
+            seen.add(cid)
+            stale = self._entries.pop(cid, None)
+            if stale is not None:
+                # nb-mismatch re-insert: release the superseded entry's
+                # rows first or they would leak from the pool forever.
+                self._free.extend(stale.rows.tolist())
+                evicted += 1
+            rows, ev = self._allocate(nb, round_idx)
+            evicted += ev
+            if rows is None:
+                continue  # every resident entry is already this round's
+            self._entries[cid] = _Entry(rows=rows, nb=nb, last_round=round_idx)
+            ins_src.append(comp_pos[starts[i] : starts[i] + nb])
+            ins_dst.append(rows)
+
+        n_miss = int(rplan.n_steps_total - n_hit_steps)
+        n_miss_rows = _pow2(max(n_miss, 1))
+        miss_dst = flat_steps[miss_sel]
+        return CachePlan(
+            round_idx=round_idx,
+            W=rplan.W,
+            P=P,
+            S=S,
+            content_mask=miss_sel if n_hit_steps else None,
+            n_miss_rows=n_miss_rows,
+            miss_dst=miss_dst,
+            ins_src=_cat(ins_src),
+            ins_dst=_cat(ins_dst),
+            hit_src=_cat(hit_src),
+            hit_dst=_cat(hit_dst),
+            hit_steps=n_hit_steps,
+            miss_steps=n_miss,
+            hit_clients=int(hit_sel.sum()),
+            miss_clients=int(C - hit_sel.sum()),
+            inserted_clients=len(ins_dst),
+            evicted_clients=evicted,
+        )
+
+    def _allocate(self, nb: int, round_idx: int):
+        """Take ``nb`` free rows, evicting least-recent entries as needed.
+        Entries touched this round (hits and fresh inserts) are never
+        evicted; returns (None, evicted) when only those remain."""
+        evicted = 0
+        while len(self._free) < nb:
+            cid, ent = next(iter(self._entries.items()))
+            if ent.last_round == round_idx:
+                return None, evicted
+            del self._entries[cid]
+            self._free.extend(ent.rows.tolist())
+            evicted += 1
+        rows = np.asarray([self._free.pop() for _ in range(nb)], dtype=np.int32)
+        return rows, evicted
+
+    # -- consumer side (device thread) --------------------------------------
+    def apply(self, miss_rows: dict, cplan: CachePlan) -> dict:
+        """Assemble the round's full device batches from compact miss rows.
+
+        One fused jitted pass scatters miss rows into the persistent round
+        base, recycles inserted clients' rows into the pool, and fills hit
+        slots from the pool.  Returns the ``[W, P, S, ...]`` batches dict
+        for the training step (which must NOT donate it).
+        """
+        rowsig = _row_signature(miss_rows)
+        if self._rowsig is not None and rowsig != self._rowsig:
+            msg = (
+                "batch leaf signature changed under a live device cache; "
+                f"cache holds {self._rowsig}, round needs {rowsig}"
+            )
+            raise RuntimeError(msg)
+        if self._pools is None:
+            pools = {}
+            nbytes = 0
+            for name, rows in miss_rows.items():
+                pools[name] = jnp.zeros((self.capacity,) + rows.shape[1:], rows.dtype)
+                nbytes += int(np.prod(rows.shape[1:])) * rows.dtype.itemsize
+            self._pools = pools
+            self._rowsig = rowsig
+            self._row_bytes = nbytes
+        shape = (cplan.W, cplan.P, cplan.S)
+        base_key = (shape, rowsig)
+        base = self._bases.pop(base_key, None)
+        if base is None:
+            base = {
+                name: jnp.zeros(shape + rows.shape[1:], rows.dtype)
+                for name, rows in miss_rows.items()
+            }
+            while len(self._bases) >= _MAX_BASES:
+                self._bases.popitem(last=False)
+        M = int(np.prod(shape))
+        n_ins = _pow2(int(cplan.ins_src.shape[0])) if cplan.ins_src.size else 1
+        n_hit = _pow2(int(cplan.hit_src.shape[0])) if cplan.hit_src.size else 1
+        miss_dst = _pad_idx(cplan.miss_dst, cplan.n_miss_rows, fill=M)
+        ins_src = _pad_idx(cplan.ins_src, n_ins, fill=0)
+        ins_dst = _pad_idx(cplan.ins_dst, n_ins, fill=self.capacity)
+        hit_src = _pad_idx(cplan.hit_src, n_hit, fill=0)
+        hit_dst = _pad_idx(cplan.hit_dst, n_hit, fill=M)
+        key = (shape, cplan.n_miss_rows, n_ins, n_hit, self.capacity, rowsig)
+        fn, _ = self._asm_cache.lookup(key)
+        batches, self._pools = fn(
+            base,
+            miss_rows,
+            self._pools,
+            miss_dst,
+            ins_src,
+            ins_dst,
+            hit_src,
+            hit_dst,
+        )
+        self._bases[base_key] = batches
+        cplan.bytes_saved = cplan.hit_steps * self._row_bytes
+        t = self.totals
+        t["hit_steps"] += cplan.hit_steps
+        t["miss_steps"] += cplan.miss_steps
+        t["hit_clients"] += cplan.hit_clients
+        t["miss_clients"] += cplan.miss_clients
+        t["insertions"] += cplan.inserted_clients
+        t["evictions"] += cplan.evicted_clients
+        t["bytes_saved"] += cplan.bytes_saved
+        t["rounds"] += 1
+        return batches
+
+    def invalidate(self) -> None:
+        """Drop every cached entry and reset the free list (pool/base
+        device arrays stay allocated; their content becomes unreferenced).
+
+        The engine calls this after a failed or aborted round prep — a
+        prep that raised between :meth:`plan` and :meth:`apply` may have
+        registered entries whose pool rows were never written, which a
+        retry would serve as bogus hits — and on checkpoint restore."""
+        self._entries.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def clients_cached(self) -> int:
+        return len(self._entries)
+
+    @property
+    def rows_used(self) -> int:
+        return self.capacity - len(self._free)
+
+    def stats(self) -> dict:
+        out = dict(self.totals)
+        steps = out["hit_steps"] + out["miss_steps"]
+        out["hit_rate"] = out["hit_steps"] / steps if steps else 0.0
+        out["clients_cached"] = self.clients_cached
+        out["rows_used"] = self.rows_used
+        out["compiles"] = self._asm_cache.compiles
+        return out

@@ -30,7 +30,6 @@ serve paths.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ plan designates as worker axes ("data", or "pod", or both).
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -91,7 +91,6 @@ def make_sharding_rules(policy: str, mesh: Mesh, *, fl_axes=("data",),
     Returns dict with 'params', 'arrays', 'kv' ShardingRules.
     """
     axes = set(mesh.axis_names)
-    has_pod = "pod" in axes
     fl_axes = tuple(a for a in fl_axes if a in axes)
     # FSDP must not reuse an FL-worker axis: the worker vmap already owns it
     # (spmd_axis_name), and double-booking forces XLA to replicate params.

@@ -33,8 +33,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (PartialAggregate, partial_init,
-                                    partial_update, tree_weighted_mean)
+from repro.core.aggregation import (partial_init, partial_update,
+                                    tree_weighted_mean)
 from repro.optim.optimizers import apply_updates
 
 __all__ = ["make_round_step", "make_gather_round_step", "RoundMetrics",
@@ -208,22 +208,32 @@ class StepCompileCache:
     place; batch/mask device buffers are freed at consumption), 'params'
     donates only argument 0, 'none' disables donation (the gather path,
     whose caller still needs ``global_params`` after the step).
+
+    ``donate_argnums``: explicit argnums overriding the ``donate`` presets —
+    the cache then works for *any* function signature, not just the 5-arg
+    round step (the device batch cache keys its scatter/insert programs
+    through this same counted LRU via :meth:`lookup`).
     """
 
-    def __init__(self, factory, *, capacity: int = 8, donate: str = "all"):
+    def __init__(self, factory, *, capacity: int = 8, donate: str = "all",
+                 donate_argnums: tuple | None = None):
         if donate not in ("all", "params", "none"):
             raise ValueError(f"donate must be all|params|none, got {donate!r}")
         self._factory = factory          # () -> python round_step fn
         self.capacity = max(1, int(capacity))
         self.donate = donate
+        self.donate_argnums = donate_argnums
         self._entries: OrderedDict[tuple, Any] = OrderedDict()
         self.compiles = 0
         self.evictions = 0
         self.hits = 0
 
     def _jit(self):
-        donate_argnums = {"all": (0, 1, 2, 3, 4), "params": (0,),
-                          "none": ()}[self.donate]
+        if self.donate_argnums is not None:
+            donate_argnums = self.donate_argnums
+        else:
+            donate_argnums = {"all": (0, 1, 2, 3, 4), "params": (0,),
+                              "none": ()}[self.donate]
         return jax.jit(self._factory(), donate_argnums=donate_argnums)
 
     def lookup(self, key: tuple):

@@ -31,12 +31,11 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.configs import ARCH_NAMES, SHAPES, get_arch
 from repro.launch.hlo_cost import analyze_hlo, xla_cost_dict
 from repro.launch.mesh import axis_sizes, make_production_mesh
-from repro.launch.plan import (input_specs, make_plan, param_bytes, runnable,
+from repro.launch.plan import (make_plan, param_bytes, runnable,
                                sharding_specs, skip_reason)
 from repro.launch.roofline import model_flops, roofline_terms
 from repro.launch.steps import build_jitted

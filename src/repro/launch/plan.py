@@ -48,7 +48,8 @@ def param_bytes(cfg: ArchConfig) -> int:
 
 def skip_reason(cfg: ArchConfig, shape_name: str) -> str | None:
     """The assignment's declared skips."""
-    shape = SHAPES[shape_name]
+    if shape_name not in SHAPES:
+        raise KeyError(f"unknown shape {shape_name!r}")
     if shape_name == "long_500k" and not cfg.sub_quadratic:
         return ("full quadratic attention at 524288 tokens — skipped per "
                 "assignment; runs only for ssm/hybrid families")

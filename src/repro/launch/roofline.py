@@ -27,7 +27,7 @@ ratio MODEL_FLOPS / HLO_FLOPs exposes remat/padding/dispatch waste.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -28,7 +28,7 @@ import numpy as np
 from repro.checkpoint import CheckpointStore
 from repro.configs import get_arch
 from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
-                        UniformSampler, make_placement)
+                        UniformSampler, ZipfSampler, make_placement)
 from repro.data import make_federated_dataset
 from repro.distributed import FailureEvent, WorkerPool
 from repro.fl.strategy import FedAvg, FedMedian
@@ -107,7 +107,9 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  strategy: str = "fedavg", steps_cap: int = 8,
                  seed: int = 1337, ckpt_dir: str | None = None,
                  deadline_rho: float = 0.0, rounds_per_checkpoint: int = 25,
-                 worker_specs=None) -> FederatedEngine:
+                 worker_specs=None, pipeline_depth: int = 1,
+                 device_cache_batches: int = 0,
+                 sampler: str = "uniform") -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
     key = jax.random.key(seed)
     if arch is not None:
@@ -136,7 +138,6 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
         batch_kw = dict(batch_size=batch_size, seq_len=seq_len)
     else:
         task = task or "sr"
-        tm = TASK_MODELS[task]
         params, loss_fn = make_task_model(task, key)
         ds = make_federated_dataset(
             task, seed=seed,
@@ -150,15 +151,19 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
             else WorkerPool.homogeneous(workers, type_name="a40",
                                         concurrency=concurrency))
     strat = FedAvg() if strategy == "fedavg" else FedMedian()
+    sampler_obj = (ZipfSampler(ds.n_clients, cohort, seed=seed)
+                   if sampler == "zipf"
+                   else UniformSampler(ds.n_clients, cohort, seed=seed))
     engine = FederatedEngine(
         dataset=ds, loss_fn=loss_fn, init_params=params, optimizer=optimizer,
-        placement=make_placement(placement), sampler=UniformSampler(
-            ds.n_clients, cohort, seed=seed),
+        placement=make_placement(placement), sampler=sampler_obj,
         pool=pool, telemetry=SyntheticTelemetry(seed=seed), strategy=strat,
         config=EngineConfig(steps_cap=steps_cap, seed=seed,
                             lanes_per_worker=concurrency,
                             deadline_rho=deadline_rho,
                             rounds_per_checkpoint=rounds_per_checkpoint,
+                            pipeline_depth=pipeline_depth,
+                            device_cache_batches=device_cache_batches,
                             **batch_kw),
         checkpoint_store=CheckpointStore(ckpt_dir) if ckpt_dir else None,
     )
@@ -179,6 +184,13 @@ def main() -> int:
     ap.add_argument("--strategy", default="fedavg",
                     choices=["fedavg", "fedmedian"])
     ap.add_argument("--steps-cap", type=int, default=8)
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="rounds of host prep in flight ahead of the device")
+    ap.add_argument("--device-cache-batches", type=int, default=0,
+                    help="HBM rows pinned for hot clients (0 = off)")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "zipf"],
+                    help="zipf = skewed availability (hot clients recur)")
     ap.add_argument("--seed", type=int, default=1337)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -195,7 +207,8 @@ def main() -> int:
         population=args.population, workers=args.workers,
         concurrency=args.concurrency, strategy=args.strategy,
         steps_cap=args.steps_cap, seed=args.seed, ckpt_dir=args.ckpt_dir,
-        deadline_rho=args.deadline_rho)
+        deadline_rho=args.deadline_rho, pipeline_depth=args.pipeline_depth,
+        device_cache_batches=args.device_cache_batches, sampler=args.sampler)
 
     if args.fail_worker:
         wid, rnd = (int(x) for x in args.fail_worker.split(":"))
@@ -216,7 +229,15 @@ def main() -> int:
         "mean_useful_fraction": float(np.mean(
             [r.useful_fraction for r in results])) if results else None,
         "placement": args.placement,
+        "pipeline_depth": args.pipeline_depth,
+        "mean_overlap_fraction": float(np.mean(
+            [r.overlap_fraction for r in results])) if results else None,
     }
+    if args.device_cache_batches:
+        summary["cache_hit_rate"] = float(np.mean(
+            [r.cache_hit_rate for r in results])) if results else None
+        summary["cache_bytes_saved"] = int(sum(
+            r.cache_bytes_saved for r in results))
     print(json.dumps(summary, indent=1))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:

@@ -17,12 +17,10 @@ Attention supports three implementations (the §Perf knob):
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "rms_norm", "rope", "gqa_attention", "swiglu", "gelu_mlp", "moe_layer",

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import ssd as ssdlib
 from repro.models.layers import (decode_attention, dense_init, gqa_attention,
-                                 moe_layer, rms_norm, rope)
+                                 rms_norm, rope)
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
            "decode_step", "layer_plan", "LayerKind", "param_count"]

@@ -28,7 +28,6 @@ carries ``(conv_state, ssm_state)`` — the attention-free KV-cache analogue.
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax
@@ -95,7 +94,8 @@ def ssd_chunked(x, dt, A_log, B, C, D, *, chunk: int = 128, state=None,
     Q = min(chunk, s)
     if s % Q:
         pad = Q - s % Q
-        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        def zf(a):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
         x, dt, B, C = zf(x), zf(dt), zf(B), zf(C)
         s_pad = s + pad
     else:
@@ -286,7 +286,6 @@ def mamba2_decode_step(p, x_t, cache: MambaCache, *, head_dim: int,
     z, xBC, dt = _split_in_proj(proj, d_inner, n_groups, d_state, h)
     # rolling conv window: [b, k-1, c] + current -> conv output for this token
     w = p["mamba_conv"]                                        # [k, c]
-    k = w.shape[0]
     window = jnp.concatenate([cache.conv, xBC[:, None, :]], axis=1)  # [b,k,c]
     conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
                                       w.astype(jnp.float32))).astype(x_t.dtype)

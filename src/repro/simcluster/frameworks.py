@@ -25,7 +25,7 @@ to 5000).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -35,8 +35,7 @@ from repro.core.placement import (BatchesBasedPlacement, ClientInfo,
 from repro.simcluster.engine import (RoundStats, Worker, client_time,
                                      make_workers, simulate_pull_round,
                                      simulate_push_round)
-from repro.simcluster.profiles import (AGG_RATE_FEDAVG, ClusterSpec,
-                                       TaskProfile)
+from repro.simcluster.profiles import ClusterSpec, TaskProfile
 
 __all__ = ["FRAMEWORKS", "run_experiment", "ExperimentResult"]
 

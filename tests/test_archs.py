@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import ARCH_NAMES, ARCHS
 from repro.fl.round import make_round_step
-from repro.models import (decode_step, forward, init_params, loss_fn,
+from repro.models import (decode_step, forward, init_params,
                           make_loss_fn, prefill)
 from repro.optim import sgd
 

@@ -1,7 +1,6 @@
 """Federated dataset + round-array construction tests."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placement import Assignment, ClientInfo, WorkerInfo

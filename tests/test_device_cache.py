@@ -1,0 +1,255 @@
+"""Device-resident client batch cache: plan/apply correctness against the
+host-only packer, LRU/eviction accounting, and engine integration (hit-rate
+under skewed sampling, bit-identical training with the cache on or off)."""
+
+import jax
+import numpy as np
+
+from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                        ZipfSampler, make_placement, s_bucket)
+from repro.core.placement import Assignment, ClientInfo, WorkerInfo
+from repro.data import make_federated_dataset
+from repro.data.batching import (PackBuffers, build_round_arrays,
+                                 gather_content_rows, plan_round)
+from repro.data.device_cache import DeviceBatchCache
+from repro.distributed import WorkerPool
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+
+
+def _assignment(ds, cids, workers=2):
+    winfos = [WorkerInfo(wid=i) for i in range(workers)]
+    per = {w.wid: [] for w in winfos}
+    for i, c in enumerate(cids):
+        per[winfos[i % workers].wid].append(
+            ClientInfo(cid=c, n_batches=ds.n_batches(c),
+                       n_samples=ds.n_samples(c)))
+    return Assignment(per_worker=per), winfos
+
+
+def _ds():
+    return make_federated_dataset("sr", n_clients=32, input_dim=8,
+                                  batch_size=2, size_mu=2.0, size_sigma=0.5)
+
+
+def _device_round(ds, cids, cache, t, *, steps_cap=3, buffers=None,
+                  with_ref=True):
+    """One cache-mediated round: plan → gather compact miss rows → fused
+    device assembly.  Returns (assembled device batches, cache plan,
+    reference full pack).  NOTE: the returned batches double as the cache's
+    persistent round base and are donated by the NEXT same-shape round —
+    read them before driving another round."""
+    assignment, workers = _assignment(ds, cids)
+    plan = plan_round(assignment, workers, steps_cap=steps_cap)
+    S = s_bucket(plan.s_real)
+    cplan = cache.plan(plan, S, t)
+    rows = gather_content_rows(ds, plan, cplan.content_mask,
+                               cplan.n_miss_rows, batch_size=2,
+                               buffers=buffers)
+    ref = (build_round_arrays(ds, plan=plan, batch_size=2, s_align=s_bucket)
+           if with_ref else None)
+    miss = {k: jax.device_put(v) for k, v in rows.items()}
+    out = cache.apply(miss, cplan)
+    return out, cplan, ref
+
+
+def _assert_matches_ref(out, ref):
+    mask = ref.step_mask.astype(bool)
+    for name in ref.batches:
+        got = np.asarray(out[name])
+        np.testing.assert_array_equal(got[mask], ref.batches[name][mask])
+
+
+def test_cache_round_trip_bit_identical_to_host_pack():
+    """Round 2 re-samples round 1's clients: every slot the cache assembles
+    device-side must hold exactly the bytes the host path would have packed
+    (real slots — padded slots are masked and may differ)."""
+    ds = _ds()
+    cache = DeviceBatchCache(64)
+    out1, cp1, ref1 = _device_round(ds, [1, 2, 3, 4], cache, t=0)
+    assert cp1.hit_steps == 0 and cp1.inserted_clients == 4
+    _assert_matches_ref(out1, ref1)       # before round 2 donates the base
+    out2, cp2, ref2 = _device_round(ds, [3, 4, 5, 1], cache, t=1)
+    assert cp2.hit_clients == 3 and cp2.miss_clients == 1
+    assert cp2.hit_steps > 0
+    _assert_matches_ref(out2, ref2)
+
+
+def test_cache_hit_skips_host_gather():
+    """On a full-hit round the packer is asked for zero batches of content —
+    not even the leaf-shape probe (PackBuffers remembers the row specs)."""
+    ds = _ds()
+    cache = DeviceBatchCache(64)
+    buffers = PackBuffers(depth=2)
+    _device_round(ds, [1, 2], cache, t=0, buffers=buffers)
+    calls = []
+    orig = ds.gather_batches
+
+    def spy(cids, bidx, **kw):
+        calls.append(len(np.asarray(cids)))
+        return orig(cids, bidx, **kw)
+
+    ds.gather_batches = spy
+    _, cp, _ = _device_round(ds, [1, 2], cache, t=1, buffers=buffers,
+                             with_ref=False)
+    assert cp.miss_steps == 0 and cp.content_mask is not None
+    assert not cp.content_mask.any()
+    assert calls == []                  # no host gather at all
+    assert cp.n_miss_rows == 1          # H2D shrinks to one padding row
+    assert cp.bytes_saved > 0
+
+
+def test_lru_eviction_accounting():
+    """Capacity forces the least-recent client out; counters add up and the
+    evicted client misses (and re-inserts) when it returns."""
+    ds = _ds()
+    nb = {c: min(ds.n_batches(c), 3) for c in range(8)}
+    cap = nb[1] + nb[2] + nb[3]
+    cache = DeviceBatchCache(cap)
+    _device_round(ds, [1, 2, 3], cache, t=0)       # fills the pool exactly
+    assert cache.rows_used == cap and cache.clients_cached == 3
+    # 4 needs rows → evicts LRU head (client 1); 2 and 3 untouched until now
+    _, cp, _ = _device_round(ds, [2, 3, 4], cache, t=1)
+    assert cp.hit_clients == 2 and cp.inserted_clients == 1
+    assert cp.evicted_clients >= 1
+    assert cache.clients_cached == 3
+    # client 1 was evicted: must miss now, and something else gets evicted
+    _, cp, _ = _device_round(ds, [1], cache, t=2)
+    assert cp.hit_clients == 0 and cp.miss_clients == 1
+    st = cache.stats()
+    assert st["insertions"] - st["evictions"] == cache.clients_cached
+    assert st["hit_steps"] + st["miss_steps"] > 0
+    assert 0.0 < st["hit_rate"] < 1.0
+    assert cache.rows_used <= cap
+
+
+def test_same_round_entries_never_evicted():
+    """When every resident row was touched this round, insertion is skipped
+    rather than evicting a row the current round's scatter still needs."""
+    ds = _ds()
+    nb1 = min(ds.n_batches(1), 3)
+    cache = DeviceBatchCache(nb1)                  # room for one client
+    _, cp, _ = _device_round(ds, [1, 2], cache, t=0)
+    assert cp.inserted_clients == 1                # only client 1 fit
+    _, cp, _ = _device_round(ds, [1, 2], cache, t=1)
+    assert cp.hit_clients == 1                     # 1 hits …
+    assert cp.inserted_clients == 0                # … and 2 cannot displace it
+    assert cp.evicted_clients == 0
+
+
+def test_nb_mismatch_reinsert_frees_old_rows():
+    """A client re-inserted under a different steps_cap must release its
+    superseded rows — otherwise pool capacity leaks on every mismatch."""
+    ds = _ds()
+    cache = DeviceBatchCache(64)
+    _device_round(ds, [1, 2], cache, t=0, steps_cap=3)
+    used_before = cache.rows_used
+    for t in range(1, 4):  # alternate nb: each re-insert supersedes the old
+        _, cp, _ = _device_round(ds, [1, 2], cache, t=t,
+                                 steps_cap=2 if t % 2 else 3)
+        assert cp.hit_clients == 0          # nb mismatch is always a miss
+        assert cp.inserted_clients == 2
+    assert cache.rows_used <= used_before   # no monotonic leak
+    st = cache.stats()
+    assert st["insertions"] - st["evictions"] == cache.clients_cached
+
+
+def test_invalidate_clears_entries_and_recovers():
+    """invalidate() drops every entry; the next round misses, re-inserts,
+    and still assembles bit-identical content."""
+    ds = _ds()
+    cache = DeviceBatchCache(64)
+    _device_round(ds, [1, 2], cache, t=0)
+    assert cache.clients_cached == 2
+    cache.invalidate()
+    assert cache.clients_cached == 0 and cache.rows_used == 0
+    out, cp, ref = _device_round(ds, [1, 2], cache, t=1)
+    assert cp.hit_clients == 0 and cp.inserted_clients == 2
+    _assert_matches_ref(out, ref)
+
+
+def test_oversized_client_never_cached():
+    ds = _ds()
+    cache = DeviceBatchCache(2)
+    _, cp, _ = _device_round(ds, [1], cache, t=0, steps_cap=5)
+    if min(ds.n_batches(1), 5) > 2:
+        assert cp.inserted_clients == 0 and cache.clients_cached == 0
+
+
+def _engine(depth, cache_rows, *, placement="rr", sampler=None):
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
+                                batch_size=4, size_mu=2.5, size_sigma=0.8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=2)
+    return FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement(placement),
+        sampler=sampler or ZipfSampler(64, 8, a=1.2),
+        pool=WorkerPool.homogeneous(2, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(steps_cap=4, batch_size=4,
+                            pipeline_depth=depth,
+                            device_cache_batches=cache_rows))
+
+
+def test_engine_cache_bit_identical_and_hits_under_skew():
+    """Zipf sampling re-draws hot clients: the cached engine must train
+    bit-identically to the uncached one while reporting hits and bytes
+    saved in RoundResult."""
+    plain = _engine(0, 0).run(8)
+    for depth in (0, 2):
+        eng = _engine(depth, 64)
+        res = eng.run(8)
+        assert [r.loss for r in res] == [r.loss for r in plain], depth
+        assert sum(r.cache_hit_rate for r in res) > 0
+        assert sum(r.cache_bytes_saved for r in res) > 0
+        assert all(0.0 <= r.cache_hit_rate <= 1.0 for r in res)
+        st = eng.cache_stats
+        assert st["hit_steps"] > 0 and st["rounds"] == 8
+        assert st["bytes_saved"] == sum(r.cache_bytes_saved for r in res)
+
+
+def test_engine_cache_accounting_under_eviction():
+    """A pool much smaller than the working set must keep evicting yet stay
+    exact: counters consistent, training unchanged."""
+    plain = _engine(0, 0).run(8)
+    eng = _engine(1, 12)                  # a few clients' worth of rows
+    res = eng.run(8)
+    assert [r.loss for r in res] == [r.loss for r in plain]
+    st = eng.cache_stats
+    assert st["evictions"] > 0
+    assert st["insertions"] - st["evictions"] == st["clients_cached"]
+    assert eng._device_cache.rows_used <= 12
+
+
+def test_prep_failure_invalidates_cache():
+    """A prep that dies between cache.plan and cache.apply leaves entries
+    whose pool rows were never written; the engine must drop them so a
+    retrying caller never gets served zero-filled 'hits'."""
+    import pytest
+
+    for depth in (0, 2):
+        eng = _engine(depth, 64)
+        eng.run(2)
+        assert eng._device_cache.clients_cached > 0
+        orig = eng.dataset.gather_batches
+
+        def boom(cids, bidx, **kw):
+            raise RuntimeError("gather died")
+
+        eng.dataset.gather_batches = boom      # fails AFTER cache.plan ran
+        with pytest.raises(RuntimeError, match="gather died"):
+            eng.run(3)
+        assert eng._device_cache.clients_cached == 0, depth
+        assert eng._device_cache.rows_used == 0
+        eng.dataset.gather_batches = orig
+        res = eng.run(2)                       # retry trains on real bytes
+        assert all(np.isfinite(r.loss) for r in res)
+
+
+def test_engine_without_cache_reports_zeroes():
+    res = _engine(1, 0).run(3)
+    assert all(r.cache_hit_rate == 0.0 for r in res)
+    assert all(r.cache_bytes_saved == 0 for r in res)
+    assert _engine(1, 0).cache_stats == {}

@@ -4,7 +4,6 @@ XLA's own cost_analysis on unrolled modules and correctly scale rolled scans
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_cost import analyze_hlo, xla_cost_dict
 

@@ -1,0 +1,72 @@
+"""The CI perf-regression gate: passes on equal runs, catches each class of
+regression, tolerates cross-machine timing differences inside the band."""
+
+import copy
+import json
+
+from benchmarks.perf_gate import compare, main
+
+
+def _record():
+    return {
+        "benchmark": "pipeline",
+        "pack": {"speedup_x": 9.5, "vectorized_pack_s_per_round": 0.7},
+        "engine": {
+            "depth0": {"overlap_fraction": 0.0, "recompiles": 1},
+            "depth1": {"overlap_fraction": 0.87, "recompiles": 1},
+            "depth2": {"overlap_fraction": 0.87, "recompiles": 1},
+        },
+        "device_cache": {"on": {"hit_rate": 0.6}},
+    }
+
+
+def test_identical_runs_pass():
+    assert compare(_record(), _record()) == []
+
+
+def test_noise_within_band_passes():
+    fresh = _record()
+    fresh["pack"]["vectorized_pack_s_per_round"] = 1.6   # 2.3x, CI machine
+    fresh["engine"]["depth1"]["overlap_fraction"] = 0.80
+    fresh["device_cache"]["on"]["hit_rate"] = 0.55
+    assert compare(_record(), fresh) == []
+
+
+def test_each_regression_class_is_caught():
+    cases = [
+        ("pack speedup floor",
+         lambda r: r["pack"].__setitem__("speedup_x", 1.4)),
+        ("pack time blowup",
+         lambda r: r["pack"].__setitem__("vectorized_pack_s_per_round", 5.0)),
+        ("overlap collapse",
+         lambda r: r["engine"]["depth1"].__setitem__("overlap_fraction", 0.2)),
+        ("depth2 below depth1",
+         lambda r: r["engine"]["depth2"].__setitem__("overlap_fraction", 0.5)),
+        ("recompile growth",
+         lambda r: r["engine"]["depth1"].__setitem__("recompiles", 4)),
+        ("cache never hits",
+         lambda r: r["device_cache"]["on"].__setitem__("hit_rate", 0.0)),
+    ]
+    for name, mutate in cases:
+        fresh = copy.deepcopy(_record())
+        mutate(fresh)
+        assert compare(_record(), fresh), f"gate missed: {name}"
+
+
+def test_missing_sections_fail_not_crash():
+    fresh = _record()
+    del fresh["device_cache"]
+    failures = compare(_record(), fresh)
+    assert any("device_cache" in f for f in failures)
+
+
+def test_cli_roundtrip(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_record()))
+    fresh.write_text(json.dumps(_record()))
+    assert main([str(base), str(fresh)]) == 0
+    bad = copy.deepcopy(_record())
+    bad["engine"]["depth1"]["recompiles"] = 9
+    fresh.write_text(json.dumps(bad))
+    assert main([str(base), str(fresh)]) == 1

@@ -216,6 +216,93 @@ def test_pipeline_depth1_matches_depth0_losses_lb():
     assert [r.loss for r in sync] == [r.loss for r in pipe]
 
 
+def test_pipeline_depth2_matches_depth0_exactly():
+    """Depth 2 keeps two preps in flight, but every host mutation (sampler
+    RNG, refit, telemetry draws, observe) runs in round order on the single
+    producer thread — losses AND simulated telemetry must be bit-identical
+    to the synchronous loop, for both telemetry-free and LB placement."""
+    for placement in ("rr", "lb"):
+        sync = _engine(0, placement=placement).run(6)
+        deep = _engine(2, placement=placement).run(6)
+        assert [r.loss for r in sync] == [r.loss for r in deep], placement
+        assert [r.makespan for r in sync] == \
+            [r.makespan for r in deep], placement
+        assert [r.idle_time for r in sync] == \
+            [r.idle_time for r in deep], placement
+        assert [r.s_steps for r in sync] == [r.s_steps for r in deep]
+
+
+def test_pipeline_depth2_split_runs_resume_cleanly():
+    """Splitting a depth-2 run across run() calls must not change results —
+    the prep queue drains at the run boundary and refills correctly."""
+    for placement in ("rr", "lb"):
+        whole = _engine(2, placement=placement).run(6)
+        eng = _engine(2, placement=placement)
+        split = eng.run(2) + eng.run(3) + eng.run(1)
+        assert [r.loss for r in whole] == [r.loss for r in split], placement
+        assert eng.round_idx == 6
+
+
+def test_execute_failure_stops_producer():
+    """A device-step failure must abort the producer too: queued preps for
+    rounds that will never execute may not keep consuming sampler RNG or
+    telemetry draws.  (The one prep already in flight may finish.)"""
+    import threading
+
+    eng = _engine(2, placement="lb")
+    release = threading.Event()
+    prepared = []
+    orig_prep = eng._prepare_round
+    orig_advance = eng.pool.advance_to
+
+    def slow_advance(t):
+        if t >= 1:
+            # Hold the producer inside prep(1) until well after the abort
+            # flag is set, so prep(2)'s guard check is deterministic.
+            assert release.wait(timeout=30)
+        return orig_advance(t)
+
+    def spy_prep(t):
+        prepared.append(t)
+        return orig_prep(t)
+
+    eng.pool.advance_to = slow_advance
+    eng._prepare_round = spy_prep
+
+    def boom(prep):
+        raise RuntimeError("device step died")
+
+    eng._execute = boom
+    # Unblock the producer only after run() has set the abort flag (it is
+    # set before the exception propagates, on the same thread).
+    threading.Timer(1.0, release.set).start()
+    with pytest.raises(RuntimeError, match="device step died"):
+        eng.run(5)
+    release.set()
+    assert prepared == [0, 1]          # preps 2..4 stopped at the guard
+    assert eng.round_idx == 0          # round 0 never executed
+    rows = [r for m in eng.placement.models.values() for (r, _, _) in m._xs]
+    assert all(r <= 1 for r in rows)   # no telemetry for unreached rounds
+
+
+def test_engine_config_rejects_bad_depth_and_cache():
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        EngineConfig(pipeline_depth=-1)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        EngineConfig(pipeline_depth=1.5)
+    with pytest.raises(ValueError, match="device_cache_batches"):
+        EngineConfig(device_cache_batches=-4)
+    with pytest.raises(ValueError, match="compile_cache_size"):
+        EngineConfig(compile_cache_size=0)
+
+
+def test_pack_buffer_ring_sized_depth_plus_one():
+    """Rounds t..t+depth are in flight together: the ring must hold
+    depth+1 slot sets so the producer never rewrites a live buffer."""
+    for depth in (0, 1, 2, 3):
+        assert _engine(depth)._pack_buffers.depth == depth + 1
+
+
 def test_pipeline_split_runs_resume_cleanly():
     """Splitting a pipelined run must not change results — including under
     LB placement, whose refit cadence crosses the run() boundary."""
@@ -255,6 +342,27 @@ def test_background_prep_failure_preserves_executed_round():
         eng.run(4)
     assert eng.round_idx == 2
     assert len(eng.history) == 2
+    assert all(np.isfinite(r.loss) for r in eng.history)
+
+
+def test_deep_prep_failure_books_all_executed_rounds():
+    """Depth 2: the failing prep (round 2) is two ahead when submitted; the
+    rounds that DID execute (0 and 1) must both land in history, later
+    queued preps are cancelled, and the error still surfaces."""
+    eng = _engine(2)
+    orig = eng.sampler.sample
+
+    def boom(t):
+        if t == 2:
+            raise RuntimeError("sampler died")
+        return orig(t)
+
+    eng.sampler.sample = boom
+    with pytest.raises(RuntimeError, match="sampler died"):
+        eng.run(5)
+    assert eng.round_idx == 2
+    assert len(eng.history) == 2
+    assert [r.round_idx for r in eng.history] == [0, 1]
     assert all(np.isfinite(r.loss) for r in eng.history)
 
 

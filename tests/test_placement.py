@@ -58,7 +58,8 @@ def test_bb_beats_rr_on_skewed_sizes():
     rng = np.random.default_rng(0)
     sizes = np.maximum(1, rng.lognormal(3.5, 1.5, 200).astype(int))
     clients, workers = _clients(sizes), _workers(4)
-    time_of = lambda w, c: float(c.n_batches)
+    def time_of(w, c):
+        return float(c.n_batches)
     idle_rr = RoundRobinPlacement().assign(clients, workers).idle_time(time_of)
     idle_bb = BatchesBasedPlacement().assign(clients, workers).idle_time(time_of)
     assert idle_bb < idle_rr
@@ -94,7 +95,6 @@ def test_lb_beats_rr_and_bb_on_heterogeneous_gpus():
     workers = _workers(4, ["a40", "2080ti", "2080ti", "2080ti"])
     lb = LearningBasedPlacement()
     _train_lb(lb, workers)
-    tel = SyntheticTelemetry(seed=99)
     rng = np.random.default_rng(42)
     sizes = np.maximum(1, rng.lognormal(3.5, 1.3, 400).astype(int))
     clients = _clients(sizes)

@@ -1,7 +1,6 @@
 """Planner + sharding-rule tests (no production mesh needed — these check
 the pure logic; the 256/512-chip lowering itself is the dry-run)."""
 
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -66,7 +65,6 @@ def test_decode_plan_is_serve_kind():
 
 
 def test_filter_spec_drops_nondividing_axes():
-    mesh = make_test_mesh((1, 1), ("data", "model"))
     ax = {"data": 16, "model": 16}
     # batch=1 cannot shard over data; 1500 cannot shard over model
     spec = _filter_spec(P("data", None, "model"), (1, 4, 1500), ax)
