@@ -1,0 +1,193 @@
+"""Control-plane benchmark: refit latency, barrier stalls, loop scenarios.
+
+Scoreboard for the closed-loop control plane (``repro.control``), with a
+checked-in JSON (``BENCH_control.json``) that ``benchmarks.perf_gate``
+compares against in CI.  Three sections:
+
+* **refit** — latency of the per-round time-model solve, and the cost of
+  the barrier's "deterministically reuse the last fit" fast path (a refit
+  call that releases no new telemetry must not pay the least-squares
+  solve).
+* **barrier** — the real engine in measured mode, depths 0/1/2 x policies
+  {reuse, stall}: stall fraction, stall seconds, rows flushed, and the
+  audit invariant (no prep ever consumed telemetry from a round that had
+  not finished).  Structural facts asserted here are machine-independent:
+  "reuse" never stalls, "stall" never stalls at depth <= 1, audit
+  violations are always zero.
+* **scenario** — the simcluster-driven closed-loop scenarios (straggler
+  storm, worker churn, workload skew, slot adaptation).  Times are
+  *simulated*, so detection latency, false-positive counts, and
+  adaptation gain are deterministic given the seed — CI gates them
+  tightly.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+
+__all__ = ["run"]
+
+
+def _refit_section(*, rounds: int = 40, per_round: int = 64) -> dict:
+    from repro.core.timemodel import TrainingTimeModel
+
+    rng = np.random.default_rng(0)
+    model = TrainingTimeModel()
+    for r in range(10):  # warm history
+        x = rng.integers(1, 200, size=per_round)
+        t = np.maximum(0.05 * x + 0.8 * np.log(0.5 * x) + 1.2, 1e-3)
+        model.observe(r, x, t * rng.lognormal(0.0, 0.08, size=per_round))
+
+    full_s = []
+    for r in range(10, 10 + rounds):
+        x = rng.integers(1, 200, size=per_round)
+        t = np.maximum(0.05 * x + 0.8 * np.log(0.5 * x) + 1.2, 1e-3)
+        model.observe(r, x, t * rng.lognormal(0.0, 0.08, size=per_round))
+        t0 = time.perf_counter()
+        model.refit(r)
+        full_s.append(time.perf_counter() - t0)
+    fits_after_full = model.fit_count
+
+    reuse_s = []
+    for _ in range(rounds):  # the barrier released nothing new since the
+        t0 = time.perf_counter()  # last solve: cutoff and data unchanged
+        model.refit(10 + rounds - 1)
+        reuse_s.append(time.perf_counter() - t0)
+    assert model.fit_count == fits_after_full, "reuse path re-solved the fit"
+
+    full_ms = float(np.mean(full_s) * 1e3)
+    reuse_ms = float(np.mean(reuse_s) * 1e3)
+    return {
+        "points": model.n_points,
+        "rounds": rounds,
+        "full_refit_ms": full_ms,
+        "reuse_refit_ms": reuse_ms,
+        "reuse_speedup_x": full_ms / reuse_ms if reuse_ms > 0 else float("inf"),
+        "full_fits": fits_after_full,
+    }
+
+
+def _measured_engine(*, depth: int, policy: str):
+    import jax
+
+    from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                            UniformSampler, make_placement)
+    from repro.data import make_federated_dataset
+    from repro.distributed import WorkerPool
+    from repro.models.papertasks import make_task_model
+    from repro.optim import sgd
+
+    ds = make_federated_dataset("sr", n_clients=128, input_dim=32, batch_size=8)
+    params, loss = make_task_model(
+        "sr", jax.random.key(0), input_dim=32, width=64, n_blocks=2
+    )
+    return FederatedEngine(
+        dataset=ds,
+        loss_fn=loss,
+        init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement("lb"),
+        sampler=UniformSampler(128, 16),
+        pool=WorkerPool.homogeneous(4, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(
+            steps_cap=8,
+            batch_size=8,
+            pipeline_depth=depth,
+            telemetry_mode="measured",
+            barrier_policy=policy,
+        ),
+    )
+
+
+def _barrier_section(*, rounds: int = 10) -> dict:
+    out: dict = {"audit_violations": 0}
+    for policy in ("reuse", "stall"):
+        section = {}
+        for depth in (0, 1, 2):
+            eng = _measured_engine(depth=depth, policy=policy)
+            res = eng.run(rounds)
+            st = eng.control.measured.stats()
+            violations = eng.control.audit()
+            out["audit_violations"] += len(violations)
+            section[f"depth{depth}"] = {
+                "rounds": rounds,
+                "stall_fraction": st["stall_fraction"],
+                "stalls": st["stalls"],
+                "stall_s_total": st["stall_s_total"],
+                "rows_flushed": st["rows_flushed"],
+                "mean_exec_s": float(np.mean([r.exec_time for r in res])),
+                "model_ready": eng.placement.ready_for(eng.pool.snapshot()),
+            }
+        out[policy] = section
+    # machine-independent structure: reuse never stalls; stall only beyond
+    # the depth the refit cutoff already covers; the audit always holds.
+    assert out["audit_violations"] == 0, "barrier audit violated"
+    for depth in (0, 1, 2):
+        assert out["reuse"][f"depth{depth}"]["stalls"] == 0, out["reuse"]
+    for depth in (0, 1):
+        assert out["stall"][f"depth{depth}"]["stalls"] == 0, out["stall"]
+    return out
+
+
+def _scenario_section() -> dict:
+    from repro.control import run_scenario
+
+    out = {name: run_scenario(name) for name in ("straggler", "fail", "skew", "adapt")}
+    s = out["straggler"]
+    assert s["detected"] and s["detect_delay"] <= 3, s
+    assert s["recovered"], s
+    assert out["skew"]["false_drifts"] == 0, out["skew"]
+    assert out["fail"]["model_ready_after_join"], out["fail"]
+    assert out["adapt"]["gain_x"] > 1.0, out["adapt"]
+    for name, sec in out.items():
+        assert sec["audit_violations"] == 0, (name, sec)
+    return out
+
+
+def run(*, engine_rounds: int = 10) -> list[str]:
+    refit = _refit_section()
+    barrier = _barrier_section(rounds=engine_rounds)
+    scenario = _scenario_section()
+
+    record = {
+        "benchmark": "control",
+        "refit": refit,
+        "barrier": barrier,
+        "scenario": scenario,
+    }
+    out_path = os.environ.get(
+        "POLLEN_BENCH_OUT",
+        os.path.join(os.path.dirname(__file__), "..", "BENCH_control.json"),
+    )
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+    rows = ["bench_control,metric,value"]
+    rows.append(f"bench_control,refit_full_ms,{refit['full_refit_ms']:.3f}")
+    rows.append(f"bench_control,refit_reuse_ms,{refit['reuse_refit_ms']:.4f}")
+    rows.append(f"bench_control,refit_reuse_speedup_x,{refit['reuse_speedup_x']:.0f}")
+    for policy in ("reuse", "stall"):
+        for depth in ("depth0", "depth1", "depth2"):
+            b = barrier[policy][depth]
+            rows.append(
+                f"bench_control,{policy}_{depth}_stall_fraction,"
+                f"{b['stall_fraction']:.2f}"
+            )
+    rows.append(f"bench_control,audit_violations,{barrier['audit_violations']}")
+    s = scenario["straggler"]
+    rows.append(f"bench_control,straggler_detect_delay,{s['detect_delay']}")
+    rows.append(f"bench_control,straggler_fallback_rounds,{s['fallback_rounds']}")
+    rows.append(f"bench_control,skew_false_drifts,{scenario['skew']['false_drifts']}")
+    rows.append(f"bench_control,adapt_gain_x,{scenario['adapt']['gain_x']:.3f}")
+    final = scenario["adapt"]["final_slots"].get("a40", 0)
+    rows.append(f"bench_control,adapt_final_slots,{final}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,18 +1,20 @@
-"""Perf-regression gate for the pipeline benchmark (the CI tripwire).
+"""Perf-regression gate for the benchmark JSONs (the CI tripwire).
 
-Compares a fresh ``bench_pipeline`` JSON against the checked-in
-``BENCH_pipeline.json`` and exits non-zero when the PR regressed the host
-data path.  Two kinds of checks:
+Compares a fresh benchmark JSON against its checked-in baseline and exits
+non-zero when the PR regressed.  The record's ``"benchmark"`` field picks
+the check set: ``"pipeline"`` (:func:`compare`) gates the host data path,
+``"control"`` (:func:`compare_control`) gates the closed-loop control
+plane.  Two kinds of checks throughout:
 
-* **machine-independent** (strict): recompile counts are deterministic and
-  must not grow; pack speedup and overlap fractions are ratios of times
-  measured on the *same* machine in the *same* run, so they transfer across
-  hardware — they get small absolute slacks for timer noise only.  The
-  depth-2-vs-depth-1 overlap ordering is checked within the fresh run.
+* **machine-independent** (strict): recompile counts, barrier audit
+  violations, stall-fraction structure, and the simulated-time scenario
+  metrics (drift-detection delay, false-positive count, adaptation gain)
+  are deterministic and gated tightly; same-run ratios (pack speedup,
+  overlap fractions) get small absolute slacks for timer noise only.
 * **cross-run timings** (banded): absolute seconds differ wildly between a
-  laptop and a CI runner, so pack s/round only fails outside a generous
-  multiplicative band (``--time-tol``, default 3x) — it catches order-of-
-  magnitude host-path regressions, not scheduler jitter.
+  laptop and a CI runner, so pack s/round and refit latency only fail
+  outside a generous multiplicative band (``--time-tol``, default 3x) —
+  they catch order-of-magnitude regressions, not scheduler jitter.
 
 Usage::
 
@@ -25,7 +27,7 @@ import argparse
 import json
 import sys
 
-__all__ = ["compare", "main"]
+__all__ = ["compare", "compare_control", "main"]
 
 
 def _get(record: dict, path: str):
@@ -117,9 +119,103 @@ def compare(
     return failures
 
 
+def compare_control(
+    baseline: dict,
+    fresh: dict,
+    *,
+    time_tol: float = 3.0,
+    stall_slack: float = 0.35,
+) -> list[str]:
+    """Gate the control-plane benchmark (empty list == pass)."""
+    failures: list[str] = []
+
+    def check(cond: bool, msg: str) -> None:
+        if not cond:
+            failures.append(msg)
+
+    def require(path: str):
+        val = _get(fresh, path)
+        check(val is not None, f"fresh run is missing {path!r}")
+        return val
+
+    # -- machine-independent: barrier structure -------------------------------
+    violations = require("barrier.audit_violations")
+    if violations is not None:
+        check(violations == 0, f"{violations} barrier audit violation(s)")
+    for depth in ("depth0", "depth1", "depth2"):
+        frac = require(f"barrier.reuse.{depth}.stall_fraction")
+        if frac is not None:
+            check(frac == 0.0, f"reuse policy stalled at {depth}: {frac:.2f}")
+    for depth in ("depth0", "depth1"):
+        frac = require(f"barrier.stall.{depth}.stall_fraction")
+        if frac is not None:
+            check(
+                frac == 0.0,
+                f"stall policy stalled at {depth} ({frac:.2f}) where the "
+                f"refit cutoff is always satisfied",
+            )
+    d2 = require("barrier.stall.depth2.stall_fraction")
+    base_d2 = _get(baseline, "barrier.stall.depth2.stall_fraction")
+    if d2 is not None and base_d2 is not None:
+        # timing-dependent; fail only when nearly every prep stalls AND the
+        # baseline did not
+        check(
+            d2 <= max(0.9, base_d2 + stall_slack),
+            f"depth2 stall fraction {d2:.2f} vs baseline {base_d2:.2f} "
+            f"(slack {stall_slack})",
+        )
+
+    # -- machine-independent: simulated-time scenarios ------------------------
+    detected = require("scenario.straggler.detected")
+    if detected is not None:
+        check(bool(detected), "straggler drift not detected")
+    delay = require("scenario.straggler.detect_delay")
+    base_delay = _get(baseline, "scenario.straggler.detect_delay")
+    if delay is not None and base_delay is not None:
+        check(
+            delay <= base_delay + 2,
+            f"drift detection slowed: {delay} rounds vs baseline {base_delay}",
+        )
+    recovered = require("scenario.straggler.recovered")
+    if recovered is not None:
+        check(bool(recovered), "straggler never recovered")
+    false_drifts = require("scenario.skew.false_drifts")
+    if false_drifts is not None:
+        check(false_drifts == 0, f"skew shift raised {false_drifts} false drift(s)")
+    gain = require("scenario.adapt.gain_x")
+    base_gain = _get(baseline, "scenario.adapt.gain_x")
+    if gain is not None:
+        check(gain > 1.0, f"adaptive concurrency gained nothing ({gain:.3f}x)")
+        if base_gain is not None:
+            check(
+                gain >= base_gain - 0.1,
+                f"adaptation gain {gain:.3f}x regressed vs baseline "
+                f"{base_gain:.3f}x",
+            )
+
+    # -- refit latency: fast path is structural, absolute time is banded ------
+    speedup = require("refit.reuse_speedup_x")
+    if speedup is not None:
+        check(
+            speedup >= 2.0,
+            f"barrier reuse fast path only {speedup:.1f}x cheaper than a "
+            f"full refit (floor 2x)",
+        )
+    full_ms = require("refit.full_refit_ms")
+    base_ms = _get(baseline, "refit.full_refit_ms")
+    if full_ms is not None and base_ms is not None and base_ms > 0:
+        check(
+            full_ms <= base_ms * time_tol,
+            f"full refit {full_ms:.2f}ms is more than {time_tol:.1f}x the "
+            f"baseline {base_ms:.2f}ms",
+        )
+
+    return failures
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline", help="checked-in BENCH_pipeline.json")
+    ap.add_argument("baseline", help="checked-in BENCH_*.json")
     ap.add_argument("fresh", help="freshly produced benchmark JSON")
     ap.add_argument("--time-tol", type=float, default=3.0)
     ap.add_argument("--overlap-slack", type=float, default=0.15)
@@ -130,19 +226,34 @@ def main(argv: list[str] | None = None) -> int:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    failures = compare(
-        baseline,
-        fresh,
-        time_tol=args.time_tol,
-        overlap_slack=args.overlap_slack,
-        hit_rate_slack=args.hit_rate_slack,
-    )
+    base_kind = baseline.get("benchmark", "pipeline")
+    kind = fresh.get("benchmark", base_kind)
+    if kind != base_kind:
+        # Comparing across kinds would silently skip every baseline-relative
+        # check and print PASS — refuse instead.
+        print(
+            f"perf gate: baseline is {base_kind!r} but fresh is {kind!r} — "
+            f"mismatched files"
+        )
+        return 2
+    if kind == "control":
+        failures = compare_control(baseline, fresh, time_tol=args.time_tol)
+        passed = "barrier/scenarios/refit within bounds"
+    else:
+        failures = compare(
+            baseline,
+            fresh,
+            time_tol=args.time_tol,
+            overlap_slack=args.overlap_slack,
+            hit_rate_slack=args.hit_rate_slack,
+        )
+        passed = "pack/overlap/recompiles/cache within bounds"
     if failures:
-        print(f"perf gate: {len(failures)} regression(s)")
+        print(f"perf gate [{kind}]: {len(failures)} regression(s)")
         for msg in failures:
             print(f"  FAIL {msg}")
         return 1
-    print("perf gate: PASS (pack/overlap/recompiles/cache within bounds)")
+    print(f"perf gate [{kind}]: PASS ({passed})")
     return 0
 
 

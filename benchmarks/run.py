@@ -10,13 +10,16 @@ import time
 
 
 def main() -> int:
-    from benchmarks import (bench_aggregation, bench_concurrency, bench_fit,
-                            bench_frameworks, bench_kernels, bench_pipeline,
-                            bench_placement, bench_roofline,
-                            bench_scalability, bench_utilization)
+    from benchmarks import (bench_aggregation, bench_concurrency,
+                            bench_control, bench_fit, bench_frameworks,
+                            bench_kernels, bench_pipeline, bench_placement,
+                            bench_roofline, bench_scalability,
+                            bench_utilization)
 
     table = {
         "pipeline": (bench_pipeline, "pack / deep pipeline / device cache"),
+        "control": (bench_control, "closed loop — refit barrier / drift / "
+                                   "slots"),
         "fit": (bench_fit, "Fig. 7 — linear vs log-linear fit SSE"),
         "placement": (bench_placement, "Table 2 — idle time LB vs RR vs BB"),
         "frameworks": (bench_frameworks, "Figs. 8/9 — medium-scale compare"),

@@ -1,0 +1,24 @@
+"""Closed-loop control plane: measured telemetry with a depth-aware refit
+barrier, drift detection, and adaptive per-worker concurrency."""
+
+from repro.control.autoconc import AdaptiveConcurrency, SlotState
+from repro.control.controller import ControllerConfig, ControlPlane, PreRound
+from repro.control.drift import DriftDetector, DriftState, relative_errors
+from repro.control.scenarios import SCENARIOS, run_scenario
+from repro.control.telemetry import FlushResult, MeasuredTelemetry, audit_violations
+
+__all__ = [
+    "AdaptiveConcurrency",
+    "ControlPlane",
+    "ControllerConfig",
+    "DriftDetector",
+    "DriftState",
+    "FlushResult",
+    "MeasuredTelemetry",
+    "PreRound",
+    "SCENARIOS",
+    "SlotState",
+    "audit_violations",
+    "relative_errors",
+    "run_scenario",
+]

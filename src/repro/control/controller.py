@@ -1,0 +1,286 @@
+"""The closed-loop control plane: one object the engine talks to.
+
+:class:`ControlPlane` composes the three feedback mechanisms —
+
+* :class:`~repro.control.telemetry.MeasuredTelemetry` (wall-clock rounds,
+  refit barrier),
+* :class:`~repro.control.drift.DriftDetector` (is the time model still
+  predicting?),
+* :class:`~repro.control.autoconc.AdaptiveConcurrency` (how many client
+  slots per worker?)
+
+— behind four calls that slot into the engine's existing producer/consumer
+split without breaking its ordering invariant:
+
+========================  =======================  ==========================
+call                      thread                   when
+========================  =======================  ==========================
+:meth:`pre_round`         producer, round order    top of ``_prepare_round``
+:meth:`round_prepared`    producer, round order    end of ``_prepare_round``
+:meth:`round_executed`    consumer                 right after the loss sync
+:meth:`on_pool_events`    producer, round order    after ``pool.advance_to``
+========================  =======================  ==========================
+
+Every *consequential* mutation (placement-model rows, drift state, slot
+counts on the worker pool) happens on the producer in strict round order —
+the consumer only appends to the measured pending buffer and marks rounds
+finished.  In synthetic mode the controller therefore preserves the
+engine's bit-identity across pipeline depths even while actively steering
+concurrency: its inputs (simulated makespans) and its decision points
+(prepare-time, round order) are depth-independent.  In measured mode the
+refit barrier replaces bit-identity with the paper's protocol guarantee:
+no prep consumes a round that has not finished.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from repro.control.autoconc import AdaptiveConcurrency
+from repro.control.drift import DriftDetector, relative_errors
+from repro.control.telemetry import MeasuredTelemetry, audit_violations
+from repro.core.placement import BatchesBasedPlacement, LearningBasedPlacement
+
+__all__ = ["ControllerConfig", "ControlPlane", "PreRound"]
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    """Knobs for the control plane (mirrored by ``EngineConfig`` fields)."""
+
+    telemetry_mode: str = "synthetic"  # "synthetic" | "measured"
+    barrier_policy: str = "reuse"  # "reuse" | "stall"
+    stall_timeout_s: float = 120.0
+    drift_threshold: float = 0.0  # 0 disables drift detection
+    drift_window: int = 16
+    drift_recover_fraction: float = 0.5
+    drift_min_points: int = 8
+    adapt_interval: int = 0  # 0 disables adaptive concurrency
+    adapt_min_slots: int = 1
+    adapt_max_slots: int = 64
+    adapt_min_gain: float = 0.0
+
+    def __post_init__(self):
+        if self.telemetry_mode not in ("synthetic", "measured"):
+            raise ValueError(
+                f"telemetry_mode must be 'synthetic' or 'measured', "
+                f"got {self.telemetry_mode!r}"
+            )
+        if self.barrier_policy not in ("reuse", "stall"):
+            raise ValueError(
+                f"barrier_policy must be 'reuse' or 'stall', "
+                f"got {self.barrier_policy!r}"
+            )
+        if self.barrier_policy == "stall" and self.telemetry_mode != "measured":
+            raise ValueError(
+                "barrier_policy='stall' requires telemetry_mode='measured' "
+                "(synthetic telemetry has no finish-time barrier to stall on)"
+            )
+        if self.drift_threshold < 0:
+            raise ValueError(f"drift_threshold must be >= 0, got {self.drift_threshold}")
+        if self.adapt_interval < 0:
+            raise ValueError(f"adapt_interval must be >= 0, got {self.adapt_interval}")
+
+
+@dataclass
+class PreRound:
+    """What the producer learns before assigning a round."""
+
+    round_idx: int
+    stall_s: float = 0.0
+    stalled: bool = False
+    fallback: bool = False  # place with BB until the model recovers
+
+
+class ControlPlane:
+    """Closed-loop controller for one :class:`FederatedEngine` (or the
+    simcluster scenario harness — anything with the same call shape)."""
+
+    def __init__(self, cfg: ControllerConfig, *, placement, pool=None):
+        self.cfg = cfg
+        self.placement = placement
+        self.pool = pool
+        self.measured = (
+            MeasuredTelemetry(policy=cfg.barrier_policy, stall_timeout_s=cfg.stall_timeout_s)
+            if cfg.telemetry_mode == "measured"
+            else None
+        )
+        self.drift = (
+            DriftDetector(
+                threshold=cfg.drift_threshold,
+                window=cfg.drift_window,
+                recover_fraction=cfg.drift_recover_fraction,
+                min_points=cfg.drift_min_points,
+            )
+            if cfg.drift_threshold > 0
+            else None
+        )
+        self.autoconc = (
+            AdaptiveConcurrency(
+                interval=cfg.adapt_interval,
+                min_slots=cfg.adapt_min_slots,
+                max_slots=cfg.adapt_max_slots,
+                min_gain=cfg.adapt_min_gain,
+            )
+            if cfg.adapt_interval > 0
+            else None
+        )
+        self.fallback_placement = BatchesBasedPlacement()
+        self.fallback_rounds = 0
+        self.log: list = []  # (round, kind, detail)
+        if self.autoconc is not None and pool is not None:
+            # Seed each type at its current (estimated) slot count — the
+            # engine's pool carries the Table-3 / analytic-estimate values.
+            for w in pool.workers.values():
+                self.autoconc.seed(w.type_name, w.concurrency)
+
+    # -- producer side (strict round order) ----------------------------------
+    def pre_round(self, t: int) -> PreRound:
+        """Flush barrier-released telemetry into the model, update drift and
+        concurrency, and report whether placement should fall back."""
+        info = PreRound(round_idx=t)
+        if self.measured is not None:
+            out = self.measured.flush(t)
+            info.stall_s, info.stalled = out.stall_s, out.stalled
+            self._ingest_measured(t, out)
+        if self.autoconc is not None:
+            for tname, old, new in self.autoconc.maybe_update(t):
+                self._apply_slots(tname, new)
+                self.log.append((t, "slots", f"{tname}: {old} -> {new}"))
+        if self.drift is not None and self.drift.drifted:
+            info.fallback = True
+            self.fallback_rounds += 1
+        return info
+
+    def _ingest_measured(self, t: int, out) -> None:
+        by_type: dict[str, list] = {}
+        for rnd, tname, x, sec in out.rows:
+            by_type.setdefault(tname, []).append((x, sec))
+            if isinstance(self.placement, LearningBasedPlacement):
+                self.placement.observe_type(rnd, tname, x, sec)
+        if self.drift is not None:
+            self._update_drift(t, by_type)
+        if self.autoconc is not None:
+            for _, exec_s, n_steps, _ in out.round_meta:
+                if exec_s > 0:
+                    self.autoconc.observe_round(n_steps / exec_s)
+
+    def round_prepared(self, t: int, *, makespan: float, n_clients: int, rows=None) -> None:
+        """Synthetic-mode feedback: the simulated times drawn at prepare time
+        ARE the ground truth, so drift/concurrency read them directly (still
+        producer-side, still round order — depth cannot reorder this)."""
+        if self.measured is not None:
+            return  # measured mode feeds through round_executed/flush
+        if self.drift is not None and rows:
+            by_type: dict[str, list] = {}
+            for tname, x, sec in rows:
+                by_type.setdefault(tname, []).append((x, sec))
+            self._update_drift(t, by_type)
+        if self.autoconc is not None and makespan > 0:
+            self.autoconc.observe_round(n_clients / makespan)
+
+    def _update_drift(self, t: int, by_type: dict) -> None:
+        if not isinstance(self.placement, LearningBasedPlacement):
+            return
+        for tname, pairs in by_type.items():
+            model = self.placement.models.get(tname)
+            if model is None or not model.ready:
+                continue
+            xs = np.asarray([p[0] for p in pairs], dtype=np.float64)
+            ts = np.asarray([p[1] for p in pairs], dtype=np.float64)
+            self.drift.update(t, tname, relative_errors(model.predict(xs), ts))
+
+    def _apply_slots(self, type_name: str, slots: int) -> None:
+        if self.pool is None:
+            return
+        for wid, w in list(self.pool.workers.items()):
+            if w.type_name == type_name:
+                self.pool.workers[wid] = replace(w, concurrency=slots)
+
+    def on_pool_events(self, t: int, events) -> None:
+        """Elastic fail/join: reset the affected type's drift evidence and
+        (re)seed its slot count.  (The time model itself needs no bootstrap:
+        models are per *type*, so a joining worker of a known type inherits
+        the pooled telemetry of its peers — test-enforced in
+        ``tests/test_elastic.py``.)"""
+        for e in events:
+            tname = getattr(e, "type_name", "default")
+            if self.drift is not None:
+                self.drift.reset(tname, t)
+            if self.autoconc is not None:
+                if e.kind == "join":
+                    self.autoconc.seed(tname, getattr(e, "concurrency", 1))
+                    # A join into an already-tuned type must run at the
+                    # climber's current slot count, not the event's guess —
+                    # mixed concurrency would skew the next window's
+                    # throughput comparison.  (seed() is a no-op for known
+                    # types, so this is the only place that aligns it.)
+                    tuned = self.autoconc.slots_for(tname)
+                    if tuned is not None:
+                        self._apply_slots(tname, tuned)
+                elif self.pool is not None and not any(
+                    w.type_name == tname for w in self.pool.workers.values()
+                ):
+                    self.autoconc.forget(tname)
+            self.log.append((t, e.kind, tname))
+
+    # -- consumer side -------------------------------------------------------
+    def round_executed(self, t: int, exec_s: float, shares, n_steps: int, *, rows=None) -> None:
+        """Consumer hook, called right after round ``t``'s device sync.
+
+        ``rows`` carries exact per-client ``(worker_type, x, seconds)``
+        measurements when the caller has them (real clusters, the simcluster
+        harness); otherwise ``exec_s`` is attributed across ``shares``."""
+        if self.measured is None:
+            return
+        if rows is not None:
+            self.measured.record_rows(t, rows, exec_s=exec_s)
+        else:
+            self.measured.record(t, exec_s, shares, n_steps)
+
+    # -- lifecycle -----------------------------------------------------------
+    def begin_run(self, first_round: int) -> None:
+        if self.measured is not None:
+            self.measured.begin_run(first_round)
+
+    def abort(self) -> None:
+        if self.measured is not None:
+            self.measured.abort()
+
+    def reset(self, round_idx: int) -> None:
+        """Checkpoint restore: the rounds about to replay already fed every
+        feedback path once — drop pending measured rows, drift evidence,
+        and the open throughput window, or the replay double-counts them.
+        (Controller state is re-warmed, not checkpointed; ROADMAP records
+        the persist-and-resume follow-on.)"""
+        if self.measured is not None:
+            self.measured.reset(round_idx)
+        if self.drift is not None:
+            self.drift.reset_all(round_idx)
+        if self.autoconc is not None:
+            self.autoconc.restart_window()
+
+    # -- reading -------------------------------------------------------------
+    @property
+    def fallback_active(self) -> bool:
+        return self.drift is not None and self.drift.drifted
+
+    def audit(self) -> list[str]:
+        return audit_violations(self.measured) if self.measured is not None else []
+
+    def stats(self) -> dict:
+        out: dict = {
+            "telemetry_mode": self.cfg.telemetry_mode,
+            "fallback_rounds": self.fallback_rounds,
+            "events": len(self.log),
+        }
+        if self.measured is not None:
+            out["barrier"] = self.measured.stats()
+            out["audit_violations"] = len(self.audit())
+        if self.drift is not None:
+            out["drift"] = self.drift.stats()
+        if self.autoconc is not None:
+            out["concurrency"] = self.autoconc.stats()
+        return out

@@ -12,7 +12,7 @@ from .placement import (Assignment, BatchesBasedPlacement, ClientInfo,
                         LearningBasedPlacement, Placement,
                         RoundRobinPlacement, WorkerInfo, make_placement)
 from .sampling import (DeadlineFilter, PowerOfChoiceSampler, UniformSampler,
-                       ZipfSampler)
+                       ZipfSampler, restore_sampler, sampler_state)
 from .telemetry import GPUProfile, SyntheticTelemetry, TelemetryStore
 from .timemodel import (LogLinearFit, TrainingTimeModel, fit_linear,
                         fit_log_linear)
@@ -27,6 +27,6 @@ __all__ = [
     "estimate_slots_analytic", "estimate_slots_from_memory_analysis",
     "fedavg_flat", "fedmedian", "fit_linear", "fit_log_linear",
     "fold_clients", "gpu_concurrency_probe", "make_placement",
-    "partial_init", "partial_merge", "partial_update", "s_bucket",
-    "tree_weighted_mean",
+    "partial_init", "partial_merge", "partial_update", "restore_sampler",
+    "s_bucket", "sampler_state", "tree_weighted_mean",
 ]

@@ -54,6 +54,21 @@ transfer entirely.  The step does not donate its batch input while the
 cache is active (the base must survive it); params and masks still donate.
 Hit-rate and bytes saved surface per round in :class:`RoundResult`.
 
+Closed-loop control (``EngineConfig.telemetry_mode`` / drift / adaptive
+concurrency — ``repro.control``): with ``telemetry_mode="measured"`` the
+per-client times feeding the placement model come from *measured* round
+execution (consumer-side wall clock, attributed to clients by predicted
+share) instead of prepare-time synthetic draws.  Because the producer runs
+up to ``depth`` rounds ahead, a depth-aware **refit barrier** gates the
+flush: the prep of round u may only consume telemetry from rounds that had
+finished executing when it flushed — policy ``"stall"`` blocks until round
+u-2 (the refit cutoff) is in, policy ``"reuse"`` deterministically reuses
+the previous fit until the data arrives.  The controller's drift detector
+can fall placement back to Batches-Based while the model mispredicts, and
+its hill climber retunes per-type worker concurrency online; both act
+producer-side in round order, so synthetic-mode runs stay bit-identical
+across pipeline depths even with the controller enabled.
+
 The number of distinct compiled programs is bounded by bucketing the stream
 length S to the next {1x, 1.5x} power-of-two multiple (beyond-paper
 optimization "S-bucketing": O(log S) shapes, padding overhead strictly
@@ -69,9 +84,11 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import jax
+import numpy as np
 
 from repro.core.placement import (Assignment, ClientInfo,
                                   LearningBasedPlacement, Placement)
+from repro.core.sampling import restore_sampler, sampler_state
 from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
                                  build_round_masks, gather_content_rows,
                                  padding_stats, plan_round)
@@ -97,6 +114,14 @@ def s_bucket(s: int, *, base: int = 8) -> int:
         b *= 2
 
 
+def _probe_row_bytes(dataset, *, batch_size=None, seq_len=None) -> int:
+    """Bytes of one packed batch row (all leaves), from a one-batch gather."""
+    probe = dataset.gather_batches(np.asarray([0]), np.asarray([0]),
+                                   batch_size=batch_size, seq_len=seq_len)
+    return int(sum(int(np.prod(v.shape[1:])) * v.dtype.itemsize
+                   for v in probe.values()))
+
+
 @dataclass
 class RoundResult:
     round_idx: int
@@ -113,6 +138,9 @@ class RoundResult:
     recompiles: int = 0            # cumulative step compiles so far
     cache_hit_rate: float = 0.0    # device-cache step hit rate this round
     cache_bytes_saved: int = 0     # H2D bytes skipped via the device cache
+    exec_time: float = 0.0         # measured device-execution wall seconds
+    barrier_stall_s: float = 0.0   # producer stall at the refit barrier
+    drift_fallback: bool = False   # placed by the BB fallback (drift alarm)
 
 
 @dataclass
@@ -131,6 +159,14 @@ class EngineConfig:
     compile_cache_size: int = 8   # LRU cap on distinct compiled round steps
     donate_buffers: bool = True   # donate params+batches into the step
     device_cache_batches: int = 0  # HBM rows pinned for hot clients; 0 = off
+    device_cache_bytes: int = 0    # HBM cache capacity in bytes; 0 = off
+    # -- control plane (repro.control): any non-default knob enables it ----
+    telemetry_mode: str = "synthetic"   # "synthetic" | "measured"
+    barrier_policy: str = "reuse"       # "reuse" | "stall" (measured mode)
+    drift_threshold: float = 0.0        # residual EWMA alarm; 0 = off
+    drift_window: int = 16
+    adapt_interval: int = 0             # rounds per hill-climb move; 0 = off
+    adapt_max_slots: int = 64
 
     def __post_init__(self):
         depth = self.pipeline_depth
@@ -140,9 +176,37 @@ class EngineConfig:
         if self.device_cache_batches < 0:
             raise ValueError("device_cache_batches must be >= 0, got "
                              f"{self.device_cache_batches!r}")
+        if self.device_cache_bytes < 0:
+            raise ValueError("device_cache_bytes must be >= 0, got "
+                             f"{self.device_cache_bytes!r}")
         if self.compile_cache_size < 1:
             raise ValueError("compile_cache_size must be >= 1, got "
                              f"{self.compile_cache_size!r}")
+        if self.telemetry_mode not in ("synthetic", "measured"):
+            raise ValueError("telemetry_mode must be 'synthetic' or "
+                             f"'measured', got {self.telemetry_mode!r}")
+        if self.barrier_policy not in ("reuse", "stall"):
+            raise ValueError("barrier_policy must be 'reuse' or 'stall', "
+                             f"got {self.barrier_policy!r}")
+        if self.barrier_policy == "stall" and self.telemetry_mode != "measured":
+            # Silently inert would be worse than loud: the barrier only
+            # exists for measured telemetry (synthetic draws happen at
+            # prepare time and never need gating).
+            raise ValueError("barrier_policy='stall' requires "
+                             "telemetry_mode='measured' (synthetic "
+                             "telemetry is drawn at prepare time; there is "
+                             "no finish-time barrier to stall on)")
+        if self.drift_threshold < 0:
+            raise ValueError("drift_threshold must be >= 0, got "
+                             f"{self.drift_threshold!r}")
+        if self.adapt_interval < 0:
+            raise ValueError("adapt_interval must be >= 0, got "
+                             f"{self.adapt_interval!r}")
+
+    @property
+    def control_enabled(self) -> bool:
+        return (self.telemetry_mode == "measured"
+                or self.drift_threshold > 0 or self.adapt_interval > 0)
 
 
 @dataclass
@@ -157,10 +221,17 @@ class _PreparedRound:
     arrays: RoundArrays
     device: tuple            # (batches, step_mask, boundary, weight) on device
     pack_s: float            # host pack time (plan + gather + scatter)
-    makespan: float          # simulated round time (drawn at prepare time)
+    makespan: float          # simulated/predicted round time (prepare time)
     idle_time: float
     overlap_s: float = 0.0   # portion of pack_s hidden under execution
     cache_plan: CachePlan | None = None
+    n_steps_real: int = 0    # unpadded step count (throughput accounting)
+    shares: list | None = None  # (type, x, pred) attribution weights (measured)
+    stall_s: float = 0.0     # producer stall at the refit barrier
+    fallback: bool = False   # placed by the drift fallback (BB)
+    sampler_st: dict | None = None  # RNG/config snapshot after this sample
+    exec_t0: float = 0.0     # consumer-set: execution dispatch timestamp
+    exec_s: float = 0.0      # measured execution wall time (consumer-set)
 
 
 class FederatedEngine:
@@ -194,10 +265,36 @@ class FederatedEngine:
         # device copy may still be pending.  (EngineConfig.__post_init__
         # rejects negative depths.)
         self._pack_buffers = PackBuffers(depth=config.pipeline_depth + 1)
+        self._sampler_ckpt_state = None
+        if config.control_enabled:
+            # Deferred import: repro.control imports repro.core.placement,
+            # so a module-level import here would cycle through the package.
+            from repro.control.controller import (ControlPlane,
+                                                  ControllerConfig)
+            self.control = ControlPlane(
+                ControllerConfig(
+                    telemetry_mode=config.telemetry_mode,
+                    barrier_policy=config.barrier_policy,
+                    drift_threshold=config.drift_threshold,
+                    drift_window=config.drift_window,
+                    adapt_interval=config.adapt_interval,
+                    adapt_max_slots=config.adapt_max_slots),
+                placement=placement, pool=pool)
+        else:
+            self.control = None
+        cache_rows = config.device_cache_batches
+        row_bytes = 0
+        if config.device_cache_bytes > 0:
+            # Byte capacity -> rows: probe one batch for the per-row size
+            # (leaf shapes are uniform across clients by construction).
+            row_bytes = _probe_row_bytes(dataset, batch_size=config.batch_size,
+                                         seq_len=config.seq_len)
         self._device_cache = (
-            DeviceBatchCache(config.device_cache_batches,
+            DeviceBatchCache(cache_rows,
+                             capacity_bytes=config.device_cache_bytes,
+                             row_bytes=row_bytes,
                              compile_cache_size=config.compile_cache_size)
-            if config.device_cache_batches > 0 else None)
+            if (cache_rows > 0 or config.device_cache_bytes > 0) else None)
         donate = "all" if config.donate_buffers else "none"
         step_donate_argnums = None
         if self._device_cache is not None and config.donate_buffers:
@@ -235,6 +332,11 @@ class FederatedEngine:
         """Aggregate device-batch-cache counters (empty dict when off)."""
         return self._device_cache.stats() if self._device_cache else {}
 
+    @property
+    def control_stats(self) -> dict:
+        """Control-plane counters (barrier/drift/concurrency; {} when off)."""
+        return self.control.stats() if self.control is not None else {}
+
     def _s_align(self, s_real: int) -> int:
         return s_bucket(s_real, base=self.cfg.s_bucket_base)
 
@@ -256,8 +358,29 @@ class FederatedEngine:
         return ClientInfo(cid=cid, n_batches=self.dataset.n_batches(cid),
                           n_samples=self.dataset.n_samples(cid))
 
-    def _record_telemetry(self, t: int, assignment: Assignment, workers) -> tuple[float, float]:
-        """Append per-client times; return (makespan, idle_time).
+    def _accumulate_loads(self, assignment: Assignment, workers, time_fn
+                          ) -> tuple[float, float, list]:
+        """Fold ``time_fn(worker, client)`` over the assignment; return
+        (makespan, idle_time, rows) with rows = [(type, n_batches, t_c)] in
+        iteration order (the order every consumer depends on)."""
+        by_wid = {w.wid: w for w in workers}
+        loads: dict[int, float] = {}
+        rows: list = []
+        for wid, clients in assignment.per_worker.items():
+            w = by_wid[wid]
+            total = 0.0
+            for c in clients:
+                t_c = time_fn(w, c)
+                total += t_c
+                rows.append((w.type_name, c.n_batches, t_c))
+            loads[wid] = total / max(w.concurrency, 1)
+        makespan = max(loads.values()) if loads else 0.0
+        idle = sum(makespan - v for v in loads.values())
+        return makespan, idle, rows
+
+    def _record_telemetry(self, t: int, assignment: Assignment, workers
+                          ) -> tuple[float, float, list]:
+        """Append per-client times; return (makespan, idle_time, rows).
 
         With a synthetic source the per-client ground truth reproduces the
         paper's measurement loop; with ``telemetry=None`` we fall back to
@@ -266,26 +389,43 @@ class FederatedEngine:
         happen in strict round order regardless of pipeline depth — the
         simulated times depend only on the assignment, never on device
         results, so prepare-time recording is order-equivalent to the old
-        finish-time recording.
+        finish-time recording.  ``rows`` — ``[(type, x, t_c)]`` — feeds the
+        control plane's drift detector (out-of-sample residuals: the round-t
+        fit predates these draws).
         """
-        by_wid = {w.wid: w for w in workers}
-        loads: dict[int, float] = {}
-        for wid, clients in assignment.per_worker.items():
-            w = by_wid[wid]
-            total = 0.0
-            for c in clients:
-                if self.telemetry is not None:
-                    t_c = self.telemetry.sample_time(w.type_name, c.n_batches,
-                                                     concurrency=w.concurrency)
-                else:
-                    t_c = float(c.n_batches) / max(w.speed, 1e-9)
-                total += t_c
-                if isinstance(self.placement, LearningBasedPlacement):
-                    self.placement.observe(t, w, c.n_batches, t_c)
-            loads[wid] = total / max(w.concurrency, 1)
-        makespan = max(loads.values()) if loads else 0.0
-        idle = sum(makespan - v for v in loads.values())
-        return makespan, idle
+        def draw(w, c):
+            if self.telemetry is not None:
+                return self.telemetry.sample_time(w.type_name, c.n_batches,
+                                                  concurrency=w.concurrency)
+            return float(c.n_batches) / max(w.speed, 1e-9)
+
+        makespan, idle, rows = self._accumulate_loads(assignment, workers,
+                                                      draw)
+        if isinstance(self.placement, LearningBasedPlacement):
+            for tname, x, t_c in rows:
+                self.placement.observe_type(t, tname, x, t_c)
+        return makespan, idle, rows
+
+    def _predict_round(self, t: int, assignment: Assignment, workers
+                       ) -> tuple[float, float, list]:
+        """Measured mode's prepare-time half: PREDICT per-client times (no
+        synthetic draws, no ``observe``) and return the attribution shares
+        the consumer will spread the measured execution time over.
+
+        Falls back to batch-count/speed proxies until the per-type model is
+        ready — exactly the warm-up the paper's RR rounds provide.
+        """
+        models = (self.placement.models
+                  if isinstance(self.placement, LearningBasedPlacement)
+                  else {})
+
+        def predict(w, c):
+            m = models.get(w.type_name)
+            if m is not None and m.ready:
+                return float(m.predict(float(c.n_batches)))
+            return float(c.n_batches) / max(w.speed, 1e-9)
+
+        return self._accumulate_loads(assignment, workers, predict)
 
     # -- the pipeline stages ---------------------------------------------------
     def _prepare_round(self, t: int) -> _PreparedRound:
@@ -300,7 +440,19 @@ class FederatedEngine:
         the results list.
         """
         tp0 = time.perf_counter()
-        self.pool.advance_to(t)
+        fired = self.pool.advance_to(t)
+        ctl = self.control
+        stall_s, fallback = 0.0, False
+        if ctl is not None:
+            if fired:
+                ctl.on_pool_events(t, fired)
+            # The closed loop's producer half: flush barrier-released
+            # measured telemetry into the model (policy "stall" blocks here
+            # until round t-2 has finished executing), update drift stats,
+            # and apply any pending slot-count move to the pool — all before
+            # the snapshot/refit below, all in strict round order.
+            pre = ctl.pre_round(t)
+            stall_s, fallback = pre.stall_s, pre.fallback
         workers = self.pool.snapshot()
         if isinstance(self.placement, LearningBasedPlacement):
             # The paper's protocol, literally: the fit for round t runs
@@ -311,8 +463,20 @@ class FederatedEngine:
             # across pipeline depths and across split run() calls.
             self.placement.refit(t)
         clients = self._cohort(t)
-        assignment = self.placement.assign(clients, workers)
-        makespan, idle = self._record_telemetry(t, assignment, workers)
+        sampler_st = sampler_state(self.sampler)
+        place = (ctl.fallback_placement
+                 if (fallback and ctl is not None) else self.placement)
+        assignment = place.assign(clients, workers)
+        shares = None
+        if self.cfg.telemetry_mode == "measured":
+            makespan, idle, shares = self._predict_round(t, assignment,
+                                                         workers)
+        else:
+            makespan, idle, rows = self._record_telemetry(t, assignment,
+                                                          workers)
+            if ctl is not None:
+                ctl.round_prepared(t, makespan=makespan,
+                                   n_clients=len(clients), rows=rows)
         plan = plan_round(assignment, workers,
                           lanes_per_worker=self.cfg.lanes_per_worker,
                           steps_cap=self.cfg.steps_cap, min_steps=1)
@@ -346,7 +510,10 @@ class FederatedEngine:
                               assignment=assignment, arrays=arrays,
                               device=device, pack_s=pack_s,
                               makespan=makespan, idle_time=idle,
-                              cache_plan=cache_plan)
+                              cache_plan=cache_plan,
+                              n_steps_real=plan.n_steps_total,
+                              shares=shares, stall_s=stall_s,
+                              fallback=fallback, sampler_st=sampler_st)
 
     def _execute(self, prep: _PreparedRound):
         """Dispatch the compiled round step (async); returns metrics."""
@@ -366,6 +533,17 @@ class FederatedEngine:
             self.params = self.strategy.reduce(stacked, ws, self.params)
         return metrics
 
+    def _post_execute(self, prep: _PreparedRound, metrics) -> None:
+        """Consumer hook at the device sync point: measure round execution
+        wall time and — in measured mode — record/attribute it and mark the
+        round *finished* for the refit barrier (this is what wakes a
+        stalled producer, so it runs before any queue wait)."""
+        float(metrics.loss)                    # device sync point
+        prep.exec_s = time.perf_counter() - prep.exec_t0
+        if self.control is not None:
+            self.control.round_executed(prep.t, prep.exec_s, prep.shares,
+                                        prep.n_steps_real)
+
     def _finish(self, prep: _PreparedRound, metrics, t0: float) -> RoundResult:
         """Consumer tail: result bookkeeping and periodic checkpoint.  (The
         time-model refit AND telemetry recording live in ``_prepare_round``.)"""
@@ -384,9 +562,12 @@ class FederatedEngine:
                               if prep.pack_s > 0 else 0.0),
             recompiles=self._step_cache.compiles,
             cache_hit_rate=cp.hit_rate if cp is not None else 0.0,
-            cache_bytes_saved=cp.bytes_saved if cp is not None else 0)
+            cache_bytes_saved=cp.bytes_saved if cp is not None else 0,
+            exec_time=prep.exec_s, barrier_stall_s=prep.stall_s,
+            drift_fallback=prep.fallback)
         self.history.append(result)
         self.round_idx = t + 1
+        self._sampler_ckpt_state = prep.sampler_st
 
         if self.ckpt is not None and (t + 1) % self.cfg.rounds_per_checkpoint == 0:
             self.save_checkpoint()
@@ -396,15 +577,21 @@ class FederatedEngine:
     def run_round(self) -> RoundResult:
         """One fully synchronous round (also the ``pipeline_depth=0`` path)."""
         t0 = time.perf_counter()
+        if self.control is not None:
+            self.control.begin_run(self.round_idx)
         try:
             prep = self._prepare_round(self.round_idx)
+            prep.exec_t0 = time.perf_counter()
             metrics = self._execute(prep)
+            self._post_execute(prep, metrics)
         except BaseException:
             # A prep that died between cache.plan and cache.apply left LRU
             # entries whose pool rows were never written — a retry would
             # serve them as bogus hits.
             if self._device_cache is not None:
                 self._device_cache.invalidate()
+            if self.control is not None:
+                self.control.abort()
             raise
         return self._finish(prep, metrics, t0)
 
@@ -439,6 +626,10 @@ class FederatedEngine:
             # hits.  Executed rounds were already booked by the inner loop.
             if self._device_cache is not None:
                 self._device_cache.invalidate()
+            if self.control is not None:
+                # Wake a producer stalled at the refit barrier — the round
+                # it waits for will never finish now.
+                self.control.abort()
             raise
 
     def _run_pipelined_inner(self, n_rounds: int, *,
@@ -449,6 +640,8 @@ class FederatedEngine:
         depth = self.cfg.pipeline_depth
         queue: deque = deque()
         aborted = False
+        if self.control is not None:
+            self.control.begin_run(first)
 
         def guarded_prep(t):
             # Runs on the single producer thread, strictly in round order:
@@ -475,15 +668,24 @@ class FederatedEngine:
                     queue.append(pool.submit(guarded_prep, next_t))
                     next_t += 1
                 try:
+                    prep.exec_t0 = time.perf_counter()
                     metrics = self._execute(prep)
-                    float(metrics.loss)        # device sync point
+                    self._post_execute(prep, metrics)   # device sync point;
+                    # marks round t finished for the refit barrier BEFORE the
+                    # queue wait below — a depth-2 "stall" prep waiting on
+                    # round t wakes here, not after we block on its future.
                 except BaseException:
                     # Device-step failure: stop the producer too, or rounds
                     # t+1..t+depth would keep consuming sampler RNG and
                     # telemetry for rounds that will never execute.  (The
                     # prep already in flight still completes; queued ones
-                    # stop at the guard.)
+                    # stop at the guard.)  The abort must land BEFORE the
+                    # raise: leaving the with-block joins the producer, and
+                    # a prep stalled at the refit barrier would otherwise
+                    # hold the shutdown for the full stall timeout.
                     aborted = True
+                    if self.control is not None:
+                        self.control.abort()
                     for fut in queue:
                         fut.cancel()
                     raise
@@ -538,6 +740,14 @@ class FederatedEngine:
     # -- fault tolerance -------------------------------------------------------
     def save_checkpoint(self) -> None:
         extra = {"round": self.round_idx}
+        if self._sampler_ckpt_state is not None:
+            # The per-round snapshot captured at prepare time (producer):
+            # at depth >= 1 the live sampler RNG is ahead by the in-flight
+            # preps, but this snapshot matches round_idx exactly, so a
+            # restore reproduces the workload stream.
+            extra["sampler"] = self._sampler_ckpt_state
+        elif (st := sampler_state(self.sampler)) is not None:
+            extra["sampler"] = st              # pre-first-round checkpoint
         if isinstance(self.placement, LearningBasedPlacement):
             # Only rows of rounds already BOOKED: with pipeline_depth >= 1
             # the producer may have recorded telemetry for in-flight rounds
@@ -563,9 +773,24 @@ class FederatedEngine:
             # Cache state is not checkpointed; entries planned for rounds
             # past the restore point must not survive as hits.
             self._device_cache.invalidate()
+        if self.control is not None:
+            # Pending (unflushed) measured rows belong to rounds that will
+            # re-run and re-record after the restore.
+            self.control.reset(rnd)
+        if "sampler" in extra and extra["sampler"]:
+            try:
+                self.sampler = restore_sampler(extra["sampler"])
+            except (KeyError, ValueError) as e:
+                # A damaged snapshot must not silently break workload
+                # reproducibility — the whole point of persisting it.
+                print("warning: checkpoint sampler state unusable "
+                      f"({e!r}); resuming with the configured sampler — "
+                      "the workload stream will NOT match the original run")
         if isinstance(self.placement, LearningBasedPlacement) and "telemetry" in extra:
             for tname, rows in extra["telemetry"].items():
                 m = self.placement._model(tname)
                 m._xs = [tuple(r) for r in rows]
+                m._fit_sig = (-1, -1)      # direct _xs swap: force a refit
+                m._recent_sig = (-1, -1, -1)
             self.placement.refit(self.round_idx)
         return True

@@ -190,6 +190,11 @@ class LearningBasedPlacement(Placement):
     def observe(self, round_idx: int, worker: WorkerInfo, x, t) -> None:
         self._model(worker.type_name).observe(round_idx, x, t)
 
+    def observe_type(self, round_idx: int, type_name: str, x, t) -> None:
+        """Record a telemetry row by worker *type* (the control plane's
+        measured rows carry the type, not a live WorkerInfo)."""
+        self._model(type_name).observe(round_idx, x, t)
+
     def refit(self, current_round: int) -> None:
         for m in self.models.values():
             m.refit(current_round)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["UniformSampler", "ZipfSampler", "PowerOfChoiceSampler",
-           "DeadlineFilter"]
+           "DeadlineFilter", "sampler_state", "restore_sampler"]
 
 
 class UniformSampler:
@@ -27,6 +27,7 @@ class UniformSampler:
             raise ValueError("cohort_size must be positive")
         self.population = population
         self.cohort_size = cohort_size
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.with_replacement = cohort_size > population
 
@@ -53,6 +54,8 @@ class ZipfSampler:
             raise ValueError("cohort_size must be positive")
         self.population = population
         self.cohort_size = cohort_size
+        self.a = float(a)
+        self.seed = seed
         ranks = np.arange(1, population + 1, dtype=np.float64)
         weights = ranks ** -float(a)
         self.p = weights / weights.sum()
@@ -99,3 +102,45 @@ class DeadlineFilter:
             return np.ones(len(client_batches), dtype=bool)
         pred = np.atleast_1d(predict(np.asarray(client_batches, dtype=np.float64)))
         return pred <= self.deadline
+
+
+# -- checkpointable sampler state --------------------------------------------
+# A restored experiment must reproduce its workload: the sampler's full
+# configuration (kind, population, cohort size, skew exponent, seed) plus the
+# RNG stream position travel in the checkpoint's JSON metadata.  Note the
+# stream position is exact for `pipeline_depth == 0` resumes; at depth >= 1
+# the producer may have sampled in-flight rounds beyond the checkpointed one,
+# so the restored stream is "ahead" by those draws — the engine therefore
+# captures the state snapshot at prepare time, per round, and checkpoints the
+# snapshot matching the restore point (see FederatedEngine.save_checkpoint).
+
+def sampler_state(sampler) -> dict | None:
+    """JSON-serializable config + RNG state, or None for unknown samplers."""
+    if isinstance(sampler, ZipfSampler):
+        state = {"kind": "zipf", "a": sampler.a}
+    elif isinstance(sampler, UniformSampler):
+        state = {"kind": "uniform"}
+    else:
+        return None
+    state.update(population=int(sampler.population),
+                 cohort_size=int(sampler.cohort_size),
+                 seed=int(getattr(sampler, "seed", 1337)),
+                 rng=sampler.rng.bit_generator.state)
+    return state
+
+
+def restore_sampler(state: dict):
+    """Rebuild a sampler from :func:`sampler_state` output (exact config,
+    RNG stream positioned where the snapshot was taken)."""
+    kind = state["kind"]
+    if kind == "zipf":
+        s = ZipfSampler(state["population"], state["cohort_size"],
+                        a=state.get("a", 1.2), seed=state.get("seed", 1337))
+    elif kind == "uniform":
+        s = UniformSampler(state["population"], state["cohort_size"],
+                           seed=state.get("seed", 1337))
+    else:
+        raise ValueError(f"unknown sampler kind {kind!r}")
+    if "rng" in state:
+        s.rng.bit_generator.state = state["rng"]
+    return s

@@ -2,9 +2,11 @@
 
 Two sources:
 
-* ``MeasuredTelemetry`` — wall-clock measurements from real execution
-  (per-worker round times attributed back to clients proportionally to their
-  predicted share; exact per-client times on real clusters).
+* :class:`repro.control.telemetry.MeasuredTelemetry` — wall-clock
+  measurements from real execution (per-worker round times attributed back
+  to clients proportionally to their predicted share; exact per-client times
+  on real clusters), delivered through the control plane's depth-aware
+  refit barrier (``EngineConfig.telemetry_mode = "measured"``).
 * ``SyntheticTelemetry`` — the ground-truth latency generator used by tests,
   benchmarks, and the cluster simulator.  It reproduces the paper's empirical
   structure (Figs. 3/4/7): per-worker-type log-linear mean time with

@@ -167,6 +167,13 @@ class TrainingTimeModel:
     _fit: LogLinearFit | None = None
     _fit_round: int = -1
     _recent_by_x: dict = field(default_factory=dict)  # bin -> mean recent time
+    fit_count: int = 0             # full (non-reused) Eq. 3 solves so far
+    _n_trimmed: int = 0            # rows dropped by max_points retention
+    # Fast-path signatures: _xs is append-only except for retention trims,
+    # so (rows trimmed, usable-row count) pins the usable set exactly, and
+    # adding the cutoff pins the Eq. 4 recent window.
+    _fit_sig: tuple = (-1, -1)
+    _recent_sig: tuple = (-1, -1, -1)
 
     # -- telemetry ---------------------------------------------------------
     def observe(self, round_idx: int, x, t) -> None:
@@ -175,6 +182,7 @@ class TrainingTimeModel:
         for xi, ti in zip(x, t):
             self._xs.append((int(round_idx), float(xi), float(ti)))
         if self.max_points is not None and len(self._xs) > self.max_points:
+            self._n_trimmed += len(self._xs) - self.max_points
             self._xs = self._xs[-self.max_points:]
 
     @property
@@ -185,22 +193,38 @@ class TrainingTimeModel:
     def refit(self, current_round: int) -> None:
         """Fit Eq. 3 on data from rounds <= current_round - 2 and compute the
         Eq. 4 recent-window mean.  Call once per round (host-side, overlapped
-        with device execution)."""
+        with device execution).
+
+        Incremental: when no usable telemetry arrived since the last call
+        (e.g. the control plane's refit barrier released nothing under the
+        ``"reuse"`` policy), the previous fit — and, if the cutoff did not
+        move either, the Eq. 4 window — is reused without recomputation, so
+        "deterministically reuse the last fit" costs O(n) row filtering
+        instead of a least-squares solve.  ``fit_count`` counts only the
+        full solves."""
         cutoff = current_round - 2
         pts = [(x, t) for (r, x, t) in self._xs if r <= cutoff]
-        if len(pts) >= 3:
+        sig = (self._n_trimmed, len(pts))
+        if len(pts) >= 3 and sig != self._fit_sig:
             xs = np.array([p[0] for p in pts])
             ts = np.array([p[1] for p in pts])
             self._fit = fit_log_linear(xs, ts)
+            self._fit_sig = sig
+            self.fit_count += 1
+        if self._fit is not None:
             self._fit_round = current_round
         # Eq. 4 correction data: "the average training time for x observed in
         # recent data" — binned by batch count over the recent window.
+        rsig = (self._n_trimmed, len(pts), cutoff)
+        if rsig == self._recent_sig:
+            return
         buckets: dict[int, list[float]] = {}
         for (r, x, t) in self._xs:
             if cutoff - self.window < r <= cutoff:
                 buckets.setdefault(int(round(x / self.x_bin)), []).append(t)
         self._recent_by_x = {k: float(np.mean(v)) for k, v in buckets.items()
                              if len(v) >= self.min_bin_count}
+        self._recent_sig = rsig
 
     @property
     def ready(self) -> bool:

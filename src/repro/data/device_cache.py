@@ -128,7 +128,11 @@ class DeviceBatchCache:
     """LRU of hot clients' batch rows, resident in device memory.
 
     ``capacity_rows`` bounds the pool: exactly that many batch rows per
-    leaf, allocated lazily on the first round.  A client whose ``nb``
+    leaf, allocated lazily on the first round.  Alternatively (or jointly —
+    the tighter limit wins) ``capacity_bytes`` gives the budget in bytes;
+    it is converted to rows via ``row_bytes``, the per-row byte footprint
+    summed over the batch leaves (``--device-cache-mb`` in the train CLI;
+    the engine probes one batch for it).  A client whose ``nb``
     exceeds the capacity is never cached.  Entries are keyed by client id
     (with the round's ``nb`` validated on lookup — a mismatch is a miss);
     the batch leaf signature is global to the cache, and changing it under
@@ -137,15 +141,37 @@ class DeviceBatchCache:
     distinct shapes O(log S)); the least-recent is dropped beyond that.
     """
 
-    def __init__(self, capacity_rows: int, *, compile_cache_size: int = 32):
+    def __init__(
+        self,
+        capacity_rows: int = 0,
+        *,
+        capacity_bytes: int = 0,
+        row_bytes: int = 0,
+        compile_cache_size: int = 32,
+    ):
         # Deferred import: repro.fl.round reaches back into repro.core (and
         # from there repro.data), so a module-level import would cycle when
         # ``repro.data`` is the entry point.
         from repro.fl.round import StepCompileCache
 
-        if capacity_rows <= 0:
-            raise ValueError(f"capacity_rows must be positive, got {capacity_rows}")
+        if capacity_rows <= 0 and capacity_bytes <= 0:
+            raise ValueError(
+                f"need a positive capacity_rows or capacity_bytes, got "
+                f"rows={capacity_rows}, bytes={capacity_bytes}"
+            )
+        if capacity_bytes > 0:
+            # Byte budget -> rows via the per-row footprint (the caller
+            # probes one packed batch; see FederatedEngine).  When both
+            # limits are given the tighter one wins.
+            if row_bytes <= 0:
+                raise ValueError(
+                    f"capacity_bytes={capacity_bytes} needs the per-row size; "
+                    f"got row_bytes={row_bytes}"
+                )
+            by_bytes = max(1, int(capacity_bytes) // int(row_bytes))
+            capacity_rows = min(capacity_rows, by_bytes) if capacity_rows > 0 else by_bytes
         self.capacity = int(capacity_rows)
+        self.capacity_bytes = int(capacity_bytes)
         self._entries: OrderedDict[int, _Entry] = OrderedDict()
         self._free: list[int] = list(range(self.capacity - 1, -1, -1))
         self._pools: dict | None = None
@@ -357,5 +383,7 @@ class DeviceBatchCache:
         out["hit_rate"] = out["hit_steps"] / steps if steps else 0.0
         out["clients_cached"] = self.clients_cached
         out["rows_used"] = self.rows_used
+        out["capacity_rows"] = self.capacity
+        out["capacity_bytes"] = self.capacity_bytes
         out["compiles"] = self._asm_cache.compiles
         return out

@@ -7,7 +7,11 @@ receiving clients immediately.  This module provides:
 
 * :class:`WorkerPool` — the live set of workers with fail/join events, a
   per-round snapshot API, and bootstrap of new workers' time models from
-  same-type pooled telemetry;
+  same-type pooled telemetry (models are per *type*, so a joining worker of
+  a known type inherits its peers' telemetry with no RR warm-up relapse —
+  test-enforced in ``tests/test_elastic.py``).  ``advance_to`` returns the
+  events it fired so the control plane (``repro.control``) can reset drift
+  statistics and reseed slot counts for the affected types;
 * deadline-based over-sampling (:func:`oversample_cohort`,
   :func:`deadline_trim`) — production-style straggler mitigation (Bonawitz
   et al. 2019): sample (1+rho)·m clients and close the round once the target
@@ -16,7 +20,7 @@ receiving clients immediately.  This module provides:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -71,11 +75,18 @@ class WorkerPool:
         self.log.append(("join", round_idx, worker.wid))
 
     def advance_to(self, round_idx: int) -> list[FailureEvent]:
-        """Apply all events scheduled at or before ``round_idx``."""
+        """Apply all events scheduled at or before ``round_idx``.
+
+        Returned fail events carry the failed worker's ACTUAL type (the
+        scheduler rarely knows it), so per-type consumers — the control
+        plane's drift reset and slot bookkeeping — see the right type."""
         fired, remaining = [], []
         for e in self.events:
             if e.round_idx <= round_idx:
                 if e.kind == "fail":
+                    live = self.workers.get(e.wid)
+                    if live is not None and e.type_name != live.type_name:
+                        e = replace(e, type_name=live.type_name)
                     self.fail(e.wid, round_idx=round_idx)
                 else:
                     self.join(WorkerInfo(wid=e.wid, type_name=e.type_name,
@@ -92,6 +103,10 @@ class WorkerPool:
         if not self.workers:
             raise RuntimeError("worker pool is empty — cannot run a round")
         return sorted(self.workers.values(), key=lambda w: w.wid)
+
+    def type_names(self) -> list[str]:
+        """Distinct worker types currently alive (sorted)."""
+        return sorted({w.type_name for w in self.workers.values()})
 
     def __len__(self) -> int:
         return len(self.workers)

@@ -108,8 +108,12 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  seed: int = 1337, ckpt_dir: str | None = None,
                  deadline_rho: float = 0.0, rounds_per_checkpoint: int = 25,
                  worker_specs=None, pipeline_depth: int = 1,
-                 device_cache_batches: int = 0,
-                 sampler: str = "uniform") -> FederatedEngine:
+                 device_cache_batches: int = 0, device_cache_mb: float = 0.0,
+                 sampler: str = "uniform", zipf_exponent: float = 1.2,
+                 telemetry_mode: str = "synthetic",
+                 barrier_policy: str = "reuse", drift_threshold: float = 0.0,
+                 adapt_interval: int = 0,
+                 grad_clip: float | None = None) -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
     key = jax.random.key(seed)
     if arch is not None:
@@ -151,7 +155,8 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
             else WorkerPool.homogeneous(workers, type_name="a40",
                                         concurrency=concurrency))
     strat = FedAvg() if strategy == "fedavg" else FedMedian()
-    sampler_obj = (ZipfSampler(ds.n_clients, cohort, seed=seed)
+    sampler_obj = (ZipfSampler(ds.n_clients, cohort, a=zipf_exponent,
+                               seed=seed)
                    if sampler == "zipf"
                    else UniformSampler(ds.n_clients, cohort, seed=seed))
     engine = FederatedEngine(
@@ -160,10 +165,16 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
         pool=pool, telemetry=SyntheticTelemetry(seed=seed), strategy=strat,
         config=EngineConfig(steps_cap=steps_cap, seed=seed,
                             lanes_per_worker=concurrency,
+                            grad_clip=grad_clip,
                             deadline_rho=deadline_rho,
                             rounds_per_checkpoint=rounds_per_checkpoint,
                             pipeline_depth=pipeline_depth,
                             device_cache_batches=device_cache_batches,
+                            device_cache_bytes=int(device_cache_mb * 2**20),
+                            telemetry_mode=telemetry_mode,
+                            barrier_policy=barrier_policy,
+                            drift_threshold=drift_threshold,
+                            adapt_interval=adapt_interval,
                             **batch_kw),
         checkpoint_store=CheckpointStore(ckpt_dir) if ckpt_dir else None,
     )
@@ -184,13 +195,37 @@ def main() -> int:
     ap.add_argument("--strategy", default="fedavg",
                     choices=["fedavg", "fedmedian"])
     ap.add_argument("--steps-cap", type=int, default=8)
+    ap.add_argument("--grad-clip", type=float, default=None,
+                    help="global-norm gradient clip (skewed samplers can "
+                         "draw rare divergent clients; clipping tames them)")
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help="rounds of host prep in flight ahead of the device")
     ap.add_argument("--device-cache-batches", type=int, default=0,
                     help="HBM rows pinned for hot clients (0 = off)")
+    ap.add_argument("--device-cache-mb", type=float, default=0.0,
+                    help="HBM cache budget in MiB (0 = off; with "
+                         "--device-cache-batches the tighter limit wins)")
     ap.add_argument("--sampler", default="uniform",
                     choices=["uniform", "zipf"],
                     help="zipf = skewed availability (hot clients recur)")
+    ap.add_argument("--zipf-exponent", type=float, default=1.2,
+                    help="Zipf skew a (P(client k) ~ (k+1)**-a); persisted "
+                         "in checkpoint metadata so resumes reproduce the "
+                         "workload")
+    ap.add_argument("--telemetry", default="synthetic",
+                    choices=["synthetic", "measured"],
+                    help="measured = feed placement from wall-clock round "
+                         "times through the depth-aware refit barrier")
+    ap.add_argument("--barrier-policy", default="reuse",
+                    choices=["reuse", "stall"],
+                    help="measured mode: stall preps until the refit-cutoff "
+                         "round finished, or reuse the last fit")
+    ap.add_argument("--drift-threshold", type=float, default=0.0,
+                    help="residual-EWMA drift alarm; while tripped, "
+                         "placement falls back to BB (0 = off)")
+    ap.add_argument("--adapt-interval", type=int, default=0,
+                    help="rounds per adaptive-concurrency hill-climb move "
+                         "(0 = off)")
     ap.add_argument("--seed", type=int, default=1337)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -207,8 +242,14 @@ def main() -> int:
         population=args.population, workers=args.workers,
         concurrency=args.concurrency, strategy=args.strategy,
         steps_cap=args.steps_cap, seed=args.seed, ckpt_dir=args.ckpt_dir,
+        grad_clip=args.grad_clip,
         deadline_rho=args.deadline_rho, pipeline_depth=args.pipeline_depth,
-        device_cache_batches=args.device_cache_batches, sampler=args.sampler)
+        device_cache_batches=args.device_cache_batches,
+        device_cache_mb=args.device_cache_mb, sampler=args.sampler,
+        zipf_exponent=args.zipf_exponent, telemetry_mode=args.telemetry,
+        barrier_policy=args.barrier_policy,
+        drift_threshold=args.drift_threshold,
+        adapt_interval=args.adapt_interval)
 
     if args.fail_worker:
         wid, rnd = (int(x) for x in args.fail_worker.split(":"))
@@ -233,11 +274,19 @@ def main() -> int:
         "mean_overlap_fraction": float(np.mean(
             [r.overlap_fraction for r in results])) if results else None,
     }
-    if args.device_cache_batches:
+    if args.device_cache_batches or args.device_cache_mb:
         summary["cache_hit_rate"] = float(np.mean(
             [r.cache_hit_rate for r in results])) if results else None
         summary["cache_bytes_saved"] = int(sum(
             r.cache_bytes_saved for r in results))
+    if engine.control is not None:
+        summary["control"] = engine.control_stats
+        summary["mean_exec_s"] = float(np.mean(
+            [r.exec_time for r in results])) if results else None
+        summary["barrier_stall_s"] = float(sum(
+            r.barrier_stall_s for r in results))
+        summary["fallback_rounds"] = int(sum(
+            r.drift_fallback for r in results))
     print(json.dumps(summary, indent=1))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:

@@ -1,0 +1,578 @@
+"""Closed-loop control plane: measured telemetry + depth-aware refit
+barrier, drift detection, adaptive concurrency, and the engine invariants
+they must preserve (synthetic-mode bit-identity across pipeline depths)."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.control import (AdaptiveConcurrency, ControllerConfig, ControlPlane,
+                           DriftDetector, MeasuredTelemetry, audit_violations,
+                           run_scenario)
+from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                        UniformSampler, ZipfSampler, make_placement,
+                        restore_sampler, sampler_state)
+from repro.core.timemodel import TrainingTimeModel
+from repro.data import make_federated_dataset
+from repro.distributed import WorkerPool
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+
+
+def _engine(depth, placement="lb", sampler=None, **cfg_kw):
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
+                                batch_size=4, size_mu=2.5, size_sigma=0.8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=2)
+    return FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement(placement),
+        sampler=sampler or UniformSampler(64, 8),
+        pool=WorkerPool.homogeneous(2, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(steps_cap=4, batch_size=4, pipeline_depth=depth,
+                            **cfg_kw))
+
+
+# -- MeasuredTelemetry barrier (unit) -----------------------------------------
+
+def test_reuse_policy_never_blocks_and_releases_only_finished():
+    mt = MeasuredTelemetry(policy="reuse")
+    mt.begin_run(0)
+    mt.record(0, 1.0, [("a40", 10, 1.0)], 10)
+    out = mt.flush(4)              # cutoff is round 2, only round 0 finished
+    assert not out.stalled and out.stall_s == 0.0
+    assert [r[0] for r in out.rows] == [0]
+    out = mt.flush(5)              # nothing new finished -> nothing released
+    assert out.rows == [] and not out.stalled
+    assert audit_violations(mt) == []
+
+
+def test_stall_policy_blocks_until_cutoff_round_finishes():
+    mt = MeasuredTelemetry(policy="stall", stall_timeout_s=10.0)
+    mt.begin_run(0)
+    mt.record(0, 1.0, [("a40", 10, 1.0)], 10)
+    released = {}
+
+    def producer():
+        released["out"] = mt.flush(3)   # needs round 1 finished
+
+    th = threading.Thread(target=producer)
+    th.start()
+    time.sleep(0.05)
+    assert th.is_alive()                # genuinely stalled on round 1
+    mt.record(1, 1.0, [("a40", 20, 1.0)], 20)
+    th.join(timeout=10)
+    assert not th.is_alive()
+    out = released["out"]
+    assert out.stalled and out.stall_s > 0
+    assert sorted({r[0] for r in out.rows}) == [0, 1]
+    assert audit_violations(mt) == []
+
+
+def test_stall_policy_timeout_raises():
+    mt = MeasuredTelemetry(policy="stall", stall_timeout_s=0.05)
+    mt.begin_run(0)
+    with pytest.raises(RuntimeError, match="barrier timed out"):
+        mt.flush(5)
+
+
+def test_abort_wakes_stalled_producer():
+    mt = MeasuredTelemetry(policy="stall", stall_timeout_s=30.0)
+    mt.begin_run(0)
+    done = threading.Event()
+
+    def producer():
+        mt.flush(5)
+        done.set()
+
+    th = threading.Thread(target=producer)
+    th.start()
+    time.sleep(0.05)
+    mt.abort()
+    assert done.wait(timeout=10)
+    th.join()
+
+
+def test_audit_violations_flags_fabricated_release():
+    mt = MeasuredTelemetry(policy="reuse")
+    mt.record(0, 1.0, [("a40", 5, 1.0)], 5)
+    mt.flush(2)
+    # fabricate a bad entry: round 9 never finished
+    mt.audit[0].released = (0, 9)
+    assert any("never finished" in m for m in audit_violations(mt))
+
+
+# -- the barrier inside the engine (all depths, both policies) ----------------
+
+@pytest.mark.parametrize("policy", ["reuse", "stall"])
+@pytest.mark.parametrize("depth", [0, 1, 2])
+def test_no_round_consumes_unfinished_telemetry(depth, policy):
+    """The acceptance invariant, verified EXTERNALLY: every telemetry row
+    the placement model ever receives must belong to a round that had
+    already passed its device sync when the row was delivered (delivery
+    happens producer-side, at prepare time)."""
+    eng = _engine(depth, telemetry_mode="measured", barrier_policy=policy)
+    finished = set()
+    delivered = []
+    orig_post = eng._post_execute
+    orig_observe = eng.placement.observe_type
+
+    def spy_post(prep, metrics):
+        float(metrics.loss)            # device sync: round t is now done …
+        finished.add(prep.t)           # … record that BEFORE the controller
+        orig_post(prep, metrics)       # may wake a stalled producer
+
+    def spy_observe(round_idx, type_name, x, t):
+        delivered.append((round_idx, round_idx in set(finished)))
+        return orig_observe(round_idx, type_name, x, t)
+
+    eng._post_execute = spy_post
+    eng.placement.observe_type = spy_observe
+    eng.run(8)
+    assert delivered, "measured mode delivered no telemetry"
+    bad = [r for r, ok in delivered if not ok]
+    assert not bad, f"rows delivered before their round finished: {bad}"
+    assert eng.control.audit() == []
+    # the model really did warm up from measured rows
+    assert eng.placement.ready_for(eng.pool.snapshot())
+
+
+def test_stall_policy_only_stalls_beyond_depth_one():
+    """Structural: at depth <= 1 the cutoff round t-2 has always finished
+    before prep t starts, so "stall" must never actually stall there; at
+    depth 2 the producer runs one round further ahead and must stall.
+    (Device execution is slowed slightly so the producer deterministically
+    reaches the barrier while the cutoff round is still in flight — on a
+    slow-host/fast-device box the race could otherwise go the other way.)"""
+    def slow(eng):
+        orig = eng._execute
+
+        def run(prep):
+            time.sleep(0.15)
+            return orig(prep)
+
+        eng._execute = run
+        return eng
+
+    for depth in (0, 1):
+        eng = slow(_engine(depth, telemetry_mode="measured",
+                           barrier_policy="stall"))
+        eng.run(8)
+        assert eng.control.measured.stalls == 0, depth
+    eng = slow(_engine(2, telemetry_mode="measured", barrier_policy="stall"))
+    res = eng.run(8)
+    st = eng.control.measured.stats()
+    assert st["stalls"] > 0
+    assert sum(r.barrier_stall_s for r in res) > 0
+    # stalled preps still satisfied the cutoff (checked by the audit)
+    assert eng.control.audit() == []
+
+
+def test_restore_and_abort_leave_audit_clean():
+    """A checkpoint restore replays rounds (overwriting their finish order)
+    and an abort releases a stalled flush early: neither is a barrier
+    violation, and audit() must stay empty for such runs."""
+    from repro.checkpoint import CheckpointStore
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(1, telemetry_mode="measured", barrier_policy="stall",
+                      rounds_per_checkpoint=2)
+        eng.ckpt = CheckpointStore(d)
+        eng.run(5)                        # checkpoints at rounds 2 and 4
+        assert eng.restore_latest()       # in-process rewind to round 4
+        assert eng.round_idx == 4
+        eng.run(3)                        # rounds 4..6 re-run, re-finish
+        assert eng.control.audit() == []
+    # abort path: a stalled flush released early is exempt from the
+    # completeness check (the run is erroring out), not a violation
+    mt = MeasuredTelemetry(policy="stall", stall_timeout_s=30.0)
+    mt.begin_run(0)
+    th = threading.Thread(target=lambda: mt.flush(5))
+    th.start()
+    time.sleep(0.05)
+    mt.abort()
+    th.join(timeout=10)
+    assert not th.is_alive()
+    assert audit_violations(mt) == []
+
+
+def test_controller_reset_drops_feedback_for_replayed_rounds():
+    """A checkpoint restore replays rounds that already fed the drift EWMA
+    and the throughput window once — reset() must drop that evidence or
+    the replay double-counts it."""
+    cfg = ControllerConfig(telemetry_mode="measured", drift_threshold=0.5,
+                           drift_window=4, adapt_interval=2)
+    ctl = ControlPlane(cfg, placement=make_placement("lb"))
+    ctl.drift.update(3, "a40", [2.0] * 8)
+    ctl.autoconc.seed("a40", 4)
+    ctl.autoconc.observe_round(10.0)
+    ctl.autoconc.states["a40"].prev_score = 9.0
+    assert ctl.drift.drifted
+    ctl.reset(3)
+    assert not ctl.drift.drifted
+    assert ctl.drift.states["a40"].n == 0
+    assert ctl.autoconc._window == []
+    assert ctl.autoconc.states["a40"].prev_score is None
+    assert ctl.autoconc.states["a40"].slots == 4   # live pool state stays
+
+
+def test_reuse_policy_never_stalls_at_any_depth():
+    for depth in (0, 1, 2):
+        eng = _engine(depth, telemetry_mode="measured",
+                      barrier_policy="reuse")
+        res = eng.run(6)
+        assert eng.control.measured.stalls == 0
+        assert all(r.barrier_stall_s == 0.0 for r in res)
+
+
+def test_measured_mode_draws_no_synthetic_telemetry():
+    """Measured mode must not touch the SyntheticTelemetry RNG stream at
+    all — the feedback is real execution, not the generator."""
+    eng = _engine(1, telemetry_mode="measured")
+    before = repr(eng.telemetry.rng.bit_generator.state)
+    eng.run(4)
+    assert repr(eng.telemetry.rng.bit_generator.state) == before
+
+
+def test_measured_split_runs_keep_barrier_armed():
+    eng = _engine(2, telemetry_mode="measured", barrier_policy="stall")
+    eng.run(3)
+    eng.run(3)
+    assert eng.control.audit() == []
+    assert len(eng.history) == 6
+
+
+# -- synthetic-mode bit-identity across depths (controller on) ---------------
+
+def test_controller_idle_bit_identical_across_depths():
+    """Controller enabled but idle (huge drift threshold): losses AND
+    simulated telemetry must stay bit-identical across depths 0/1/2, and
+    identical to a controller-off run."""
+    base = [(r.loss, r.makespan, r.idle_time) for r in _engine(0).run(6)]
+    for depth in (0, 1, 2):
+        eng = _engine(depth, drift_threshold=1e9)
+        assert eng.control is not None and eng.control.drift is not None
+        got = [(r.loss, r.makespan, r.idle_time) for r in eng.run(6)]
+        assert got == base, f"depth {depth}"
+        assert not eng.control.drift.drifted
+
+
+def test_adaptive_concurrency_active_bit_identical_across_depths():
+    """The hill climber mutates worker slot counts mid-run — but only
+    producer-side, from simulated makespans, in round order: results must
+    still agree bit-for-bit at every depth."""
+    runs = {}
+    for depth in (0, 1, 2):
+        eng = _engine(depth, adapt_interval=2)
+        runs[depth] = [(r.loss, r.makespan) for r in eng.run(8)]
+        assert eng.control.autoconc.updates > 0   # it actually steered
+    assert runs[0] == runs[1] == runs[2]
+
+
+def test_drift_fallback_active_bit_identical_across_depths():
+    """A hair-trigger drift threshold makes the fallback engage mid-run;
+    the switch itself is a producer-side round-ordered decision, so depths
+    must still agree — and the fallback must be visible in the results."""
+    runs = {}
+    for depth in (0, 1, 2):
+        eng = _engine(depth, drift_threshold=0.01)
+        res = eng.run(8)
+        runs[depth] = [(r.loss, r.makespan, r.drift_fallback) for r in res]
+        assert any(r.drift_fallback for r in res)
+    assert runs[0] == runs[1] == runs[2]
+
+
+def test_device_failure_wakes_stalled_producer_quickly():
+    """A device-step failure while the producer is stalled at the refit
+    barrier must abort the barrier BEFORE the pipeline joins the producer
+    thread — otherwise run() hangs for the full stall timeout."""
+    eng = _engine(2, telemetry_mode="measured", barrier_policy="stall")
+    eng.control.measured.stall_timeout_s = 60.0
+    eng.run(2)                              # warm the compile cache
+    orig = eng._execute
+
+    def boom(prep):
+        if prep.t >= 4:
+            time.sleep(0.3)   # let the prep two rounds ahead reach the stall
+            raise RuntimeError("device died")
+        return orig(prep)
+
+    eng._execute = boom
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="device died"):
+        eng.run(6)
+    assert time.perf_counter() - t0 < 30.0  # no stall-timeout hang
+    assert len(eng.history) == 4            # rounds 2 and 3 were booked
+
+
+def test_fail_event_resets_the_failed_workers_type():
+    """Schedulers rarely know a worker's type: the pool must attribute the
+    fired fail event to the worker's ACTUAL type so the drift reset (and
+    slot bookkeeping) hit the right state, not the 'default' placeholder."""
+    from repro.distributed import FailureEvent
+
+    pool = WorkerPool.from_specs([("a40", 1.0, 2), ("2080ti", 0.4, 1)])
+    pool.schedule(FailureEvent(round_idx=3, kind="fail", wid=0))
+    cfg = ControllerConfig(telemetry_mode="measured", drift_threshold=0.5,
+                           drift_window=4)
+    ctl = ControlPlane(cfg, placement=make_placement("lb"), pool=pool)
+    ctl.drift.update(1, "a40", [2.0] * 8)
+    assert ctl.drift.drifted
+    fired = pool.advance_to(3)
+    assert [e.type_name for e in fired] == ["a40"]
+    ctl.on_pool_events(3, fired)
+    assert not ctl.drift.drifted            # evidence reset for the right type
+
+
+def test_join_into_tuned_type_adopts_climber_slots():
+    """A worker joining an already-tuned type must run at the hill
+    climber's current slot count, not the join event's guess — mixed
+    concurrency would skew the throughput window."""
+    from repro.distributed import FailureEvent
+
+    pool = WorkerPool.from_specs([("a40", 1.0, 14)])
+    cfg = ControllerConfig(adapt_interval=2)
+    ctl = ControlPlane(cfg, placement=make_placement("lb"), pool=pool)
+    ctl.autoconc.states["a40"].slots = 6        # climber tuned 14 -> 6
+    ctl._apply_slots("a40", 6)
+    pool.schedule(FailureEvent(round_idx=3, kind="join", wid=9,
+                               type_name="a40", concurrency=14))
+    ctl.on_pool_events(3, pool.advance_to(3))
+    assert {w.concurrency for w in pool.snapshot()} == {6}
+
+
+# -- drift detector (unit) ----------------------------------------------------
+
+def test_drift_trips_above_threshold_and_recovers_with_hysteresis():
+    d = DriftDetector(threshold=0.5, window=4, recover_fraction=0.5,
+                      min_points=4)
+    d.update(1, "a40", [0.1, 0.1, 0.1, 0.1])
+    assert not d.drifted
+    d.update(2, "a40", [2.0] * 6)
+    assert d.drifted and d.drifted_types() == ["a40"]
+    d.update(3, "a40", [0.3] * 4)          # below threshold, above recover
+    assert d.drifted                       # hysteresis holds
+    d.update(4, "a40", [0.05] * 12)
+    assert not d.drifted
+    kinds = [e[2] for e in d.events]
+    assert kinds == ["drift", "recover"]
+
+
+def test_drift_reset_clears_episode_on_pool_event():
+    d = DriftDetector(threshold=0.5, window=4, min_points=2)
+    d.update(1, "a40", [2.0] * 4)
+    assert d.drifted
+    d.reset("a40", round_idx=2)
+    assert not d.drifted
+    assert d.states["a40"].n == 0
+
+
+def test_drift_min_points_gates_the_alarm():
+    d = DriftDetector(threshold=0.5, window=4, min_points=10)
+    d.update(1, "a40", [3.0] * 9)
+    assert not d.drifted                   # not enough evidence yet
+    d.update(2, "a40", [3.0])
+    assert d.drifted
+
+
+# -- adaptive concurrency (unit) ----------------------------------------------
+
+def test_hill_climber_finds_interior_optimum():
+    """Deterministic concave throughput curve peaking at 6 slots: the
+    climber must settle within ±1 of the peak and remember the best."""
+    ac = AdaptiveConcurrency(interval=1, min_slots=1, max_slots=16)
+    ac.seed("a40", 2)
+    for _ in range(40):
+        slots = ac.states["a40"].slots
+        ac.observe_round(100.0 - (slots - 6) ** 2)
+        ac.maybe_update(0)
+    assert abs(ac.states["a40"].best_slots - 6) <= 1
+    assert abs(ac.states["a40"].slots - 6) <= 2
+
+
+def test_hill_climber_respects_bounds_and_probes_back_inward():
+    ac = AdaptiveConcurrency(interval=1, min_slots=1, max_slots=4)
+    ac.seed("a40", 3)
+    for _ in range(30):
+        ac.observe_round(float(ac.states["a40"].slots))  # more is better
+        ac.maybe_update(0)
+    assert 1 <= ac.states["a40"].slots <= 4
+    assert ac.states["a40"].best_slots == 4
+
+
+def test_round_robin_over_types_moves_one_knob_at_a_time():
+    ac = AdaptiveConcurrency(interval=1, min_slots=1, max_slots=8)
+    ac.seed("a40", 4)
+    ac.seed("2080ti", 4)
+    moved = []
+    for i in range(6):
+        ac.observe_round(10.0 + i)
+        moved += [t for (t, _, _) in ac.maybe_update(i)]
+    assert set(moved) == {"a40", "2080ti"}
+    # alternating coordinate moves, never two at once
+    assert all(a != b for a, b in zip(moved, moved[1:]))
+
+
+def test_seed_is_idempotent_and_forget_reseeds():
+    ac = AdaptiveConcurrency(interval=2, min_slots=1, max_slots=8)
+    ac.seed("a40", 4)
+    ac.seed("a40", 7)                      # ignored: already tracked
+    assert ac.states["a40"].slots == 4
+    ac.forget("a40")
+    ac.seed("a40", 7)
+    assert ac.states["a40"].slots == 7
+
+
+def test_engine_applies_slot_updates_to_pool():
+    eng = _engine(1, adapt_interval=2)
+    before = {w.wid: w.concurrency for w in eng.pool.snapshot()}
+    eng.run(8)
+    assert eng.control.autoconc.updates > 0
+    after = {w.wid: w.concurrency for w in eng.pool.snapshot()}
+    assert before != after                 # the pool really was retuned
+    slots = eng.control.autoconc.stats()["slots"]["a40"]
+    assert all(c == slots for c in after.values())
+
+
+# -- incremental refit fast path ----------------------------------------------
+
+def test_refit_reuses_fit_when_no_new_data():
+    m = TrainingTimeModel()
+    rng = np.random.default_rng(0)
+    xs = rng.integers(2, 100, size=50)
+    m.observe(0, xs, 0.05 * xs + 1.0)
+    m.refit(2)
+    assert m.ready and m.fit_count == 1
+    fit = m.fit
+    for t in (3, 4, 5):                    # barrier released nothing new
+        m.refit(t)
+    assert m.fit_count == 1                # no re-solve
+    assert m.fit is fit                    # literally the same fit object
+    m.observe(4, [10, 20], [1.5, 2.0])     # new usable telemetry arrives
+    m.refit(6)
+    assert m.fit_count == 2
+    assert m.fit is not fit
+
+
+def test_refit_fast_path_ignores_rows_beyond_cutoff():
+    m = TrainingTimeModel()
+    xs = np.arange(2, 40)
+    m.observe(0, xs, 0.05 * xs + 1.0)
+    m.refit(2)
+    n = m.fit_count
+    m.observe(5, [10.0], [1.0])            # beyond the round-3 cutoff …
+    m.refit(3)
+    assert m.fit_count == n                # … so the fit is reused
+    m.refit(7)                             # now it is usable
+    assert m.fit_count == n + 1
+
+
+# -- sampler checkpoint state -------------------------------------------------
+
+def test_sampler_state_json_round_trip_continues_stream():
+    import json
+
+    for make in (lambda: UniformSampler(100, 8, seed=5),
+                 lambda: ZipfSampler(100, 8, a=1.7, seed=5)):
+        s = make()
+        s.sample(0)
+        state = json.loads(json.dumps(sampler_state(s)))
+        expect = [s.sample(t) for t in range(1, 4)]
+        r = restore_sampler(state)
+        got = [r.sample(t) for t in range(1, 4)]
+        for a, b in zip(expect, got):
+            np.testing.assert_array_equal(a, b)
+        if isinstance(s, ZipfSampler):
+            assert r.a == s.a == 1.7
+
+
+def test_checkpoint_restores_sampler_kind_exponent_and_stream(tmp_path):
+    """A resume must reproduce the workload: the checkpointed sampler config
+    (zipf exponent included) overrides whatever the restoring process was
+    built with, and the RNG stream continues exactly — even though the
+    depth-1 producer had sampled ahead of the checkpoint."""
+    from repro.checkpoint import CheckpointStore
+
+    def engine(sampler):
+        return _engine(1, placement="rr", sampler=sampler,
+                       rounds_per_checkpoint=2)
+
+    a = engine(ZipfSampler(64, 8, a=1.7, seed=11))
+    a.ckpt = CheckpointStore(str(tmp_path))
+    whole = a.run(5)                       # checkpoints at rounds 2 and 4
+    b = engine(UniformSampler(64, 8))      # "wrong" sampler on the resume
+    b.ckpt = CheckpointStore(str(tmp_path))
+    assert b.restore_latest()
+    assert b.round_idx == 4
+    assert isinstance(b.sampler, ZipfSampler) and b.sampler.a == 1.7
+    res = b.run(1)
+    # RR placement ignores telemetry, so identical cohorts + params give a
+    # bit-identical round 4.
+    assert res[0].loss == whole[4].loss
+    assert res[0].n_clients == whole[4].n_clients
+
+
+# -- config validation --------------------------------------------------------
+
+def test_engine_config_rejects_bad_control_knobs():
+    with pytest.raises(ValueError, match="telemetry_mode"):
+        EngineConfig(telemetry_mode="wallclock")
+    with pytest.raises(ValueError, match="barrier_policy"):
+        EngineConfig(barrier_policy="block")
+    with pytest.raises(ValueError, match="drift_threshold"):
+        EngineConfig(drift_threshold=-0.1)
+    with pytest.raises(ValueError, match="adapt_interval"):
+        EngineConfig(adapt_interval=-1)
+    with pytest.raises(ValueError, match="device_cache_bytes"):
+        EngineConfig(device_cache_bytes=-8)
+    with pytest.raises(ValueError, match="requires telemetry_mode"):
+        EngineConfig(barrier_policy="stall")   # inert combo must be loud
+    assert not EngineConfig().control_enabled
+    assert EngineConfig(telemetry_mode="measured").control_enabled
+    assert EngineConfig(drift_threshold=0.5).control_enabled
+    assert EngineConfig(adapt_interval=3).control_enabled
+
+
+def test_controller_config_validates():
+    with pytest.raises(ValueError, match="telemetry_mode"):
+        ControllerConfig(telemetry_mode="nope")
+    with pytest.raises(ValueError, match="barrier_policy"):
+        ControllerConfig(barrier_policy="nope")
+    with pytest.raises(ValueError, match="requires telemetry_mode"):
+        ControllerConfig(barrier_policy="stall")
+    cfg = ControllerConfig(telemetry_mode="measured", drift_threshold=0.5,
+                           adapt_interval=2)
+    ctl = ControlPlane(cfg, placement=make_placement("lb"))
+    assert ctl.measured is not None and ctl.drift is not None
+    assert ctl.autoconc is not None
+
+
+# -- simcluster scenario harness ----------------------------------------------
+
+def test_scenarios_are_deterministic_and_pass_their_contracts():
+    s = run_scenario("straggler")
+    assert s == run_scenario("straggler")  # seeded, bit-reproducible
+    assert s["detected"] and s["detect_delay"] <= 3
+    assert s["recovered"] and s["audit_violations"] == 0
+
+    k = run_scenario("skew")
+    assert k["false_drifts"] == 0 and k["audit_violations"] == 0
+
+    f = run_scenario("fail")
+    assert f["pool_events_seen"] == 2
+    assert f["model_ready_after_join"]
+
+    a = run_scenario("adapt")
+    assert a["gain_x"] > 1.0
+    assert a["updates"] > 0
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_scenario("meteor")

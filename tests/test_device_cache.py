@@ -176,7 +176,8 @@ def test_oversized_client_never_cached():
         assert cp.inserted_clients == 0 and cache.clients_cached == 0
 
 
-def _engine(depth, cache_rows, *, placement="rr", sampler=None):
+def _engine(depth, cache_rows, *, placement="rr", sampler=None,
+            cache_bytes=0):
     ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
                                 batch_size=4, size_mu=2.5, size_sigma=0.8)
     params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
@@ -190,7 +191,8 @@ def _engine(depth, cache_rows, *, placement="rr", sampler=None):
         telemetry=SyntheticTelemetry(),
         config=EngineConfig(steps_cap=4, batch_size=4,
                             pipeline_depth=depth,
-                            device_cache_batches=cache_rows))
+                            device_cache_batches=cache_rows,
+                            device_cache_bytes=cache_bytes))
 
 
 def test_engine_cache_bit_identical_and_hits_under_skew():
@@ -253,3 +255,55 @@ def test_engine_without_cache_reports_zeroes():
     assert all(r.cache_hit_rate == 0.0 for r in res)
     assert all(r.cache_bytes_saved == 0 for r in res)
     assert _engine(1, 0).cache_stats == {}
+
+
+# -- capacity in bytes --------------------------------------------------------
+
+def test_capacity_bytes_converts_to_rows_and_tighter_limit_wins():
+    import pytest
+
+    cache = DeviceBatchCache(capacity_bytes=1000, row_bytes=96)
+    assert cache.capacity == 1000 // 96
+    # jointly: the tighter of rows/bytes wins
+    assert DeviceBatchCache(4, capacity_bytes=1000, row_bytes=96).capacity == 4
+    assert DeviceBatchCache(64, capacity_bytes=300, row_bytes=96).capacity == 3
+    # a sub-row byte budget still yields one usable row
+    assert DeviceBatchCache(capacity_bytes=10, row_bytes=96).capacity == 1
+    with pytest.raises(ValueError, match="positive capacity"):
+        DeviceBatchCache(0)
+    with pytest.raises(ValueError, match="row_bytes"):
+        DeviceBatchCache(capacity_bytes=1000)
+    assert DeviceBatchCache(capacity_bytes=1000, row_bytes=96).stats()[
+        "capacity_bytes"] == 1000
+
+
+def test_probe_row_bytes_matches_packed_leaves():
+    from repro.core.engine import _probe_row_bytes
+
+    ds = _ds()
+    got = _probe_row_bytes(ds, batch_size=2)
+    batch = ds.gather_batches(np.asarray([0]), np.asarray([0]), batch_size=2)
+    want = sum(int(np.prod(v.shape[1:])) * v.dtype.itemsize
+               for v in batch.values())
+    assert got == want > 0
+
+
+def test_engine_byte_capacity_equivalent_to_row_capacity():
+    """An engine given the byte budget of exactly R rows must behave
+    identically to one given R rows: same losses, same hit accounting."""
+    from repro.core.engine import _probe_row_bytes
+
+    row_bytes = _probe_row_bytes(
+        make_federated_dataset("sr", n_clients=64, input_dim=16,
+                               batch_size=4, size_mu=2.5, size_sigma=0.8),
+        batch_size=4)
+    by_rows = _engine(1, 64)
+    by_bytes = _engine(1, 0, cache_bytes=64 * row_bytes)
+    assert by_bytes._device_cache.capacity == 64
+    r1 = by_rows.run(8)
+    r2 = by_bytes.run(8)
+    assert [r.loss for r in r1] == [r.loss for r in r2]
+    assert [r.cache_hit_rate for r in r1] == [r.cache_hit_rate for r in r2]
+    s1, s2 = by_rows.cache_stats, by_bytes.cache_stats
+    for k in ("hit_steps", "miss_steps", "insertions", "evictions"):
+        assert s1[k] == s2[k], k

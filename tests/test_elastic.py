@@ -1,0 +1,152 @@
+"""Elastic worker management: pool events, join-event time-model bootstrap
+from pooled same-type telemetry, and deadline_trim edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core.placement import (ClientInfo, LearningBasedPlacement,
+                                  WorkerInfo)
+from repro.distributed.elastic import (FailureEvent, WorkerPool,
+                                       deadline_trim, oversample_cohort)
+
+
+def _clients(batches):
+    return [ClientInfo(cid=i, n_batches=int(b)) for i, b in enumerate(batches)]
+
+
+# -- WorkerPool events --------------------------------------------------------
+
+def test_advance_to_returns_fired_events_and_consumes_them():
+    pool = WorkerPool.homogeneous(2, type_name="a40")
+    pool.schedule(FailureEvent(round_idx=3, kind="fail", wid=0))
+    pool.schedule(FailureEvent(round_idx=5, kind="join", wid=7,
+                               type_name="2080ti", concurrency=4))
+    assert pool.advance_to(2) == []
+    fired = pool.advance_to(3)
+    assert [e.wid for e in fired] == [0]
+    assert 0 not in pool.workers
+    assert pool.advance_to(3) == []           # events fire exactly once
+    fired = pool.advance_to(9)
+    assert [e.kind for e in fired] == ["join"]
+    assert pool.workers[7].concurrency == 4
+
+
+def test_type_names_reflect_live_pool():
+    pool = WorkerPool.from_specs([("a40", 1.0, 2), ("2080ti", 0.4, 1),
+                                  ("a40", 1.0, 2)])
+    assert pool.type_names() == ["2080ti", "a40"]
+    pool.fail(1)
+    assert pool.type_names() == ["a40"]
+
+
+# -- join-event time-model bootstrap -----------------------------------------
+
+def test_join_same_type_bootstraps_from_pooled_telemetry():
+    """Time models are per *type*: a worker joining as a known type must be
+    immediately ready (no RR warm-up relapse), fed by its peers' telemetry."""
+    lb = LearningBasedPlacement()
+    old = [WorkerInfo(wid=0, type_name="a40"), WorkerInfo(wid=1, type_name="a40")]
+    rng = np.random.default_rng(3)
+    for r in range(4):
+        xs = rng.integers(2, 60, size=8)
+        for x in xs:
+            lb.observe(r, old[r % 2], int(x), 0.05 * x + 1.0)
+    lb.refit(6)
+    assert lb.ready_for(old)
+    joined = WorkerInfo(wid=9, type_name="a40")
+    # ready for the joined worker WITHOUT any telemetry of its own …
+    assert lb.ready_for(old + [joined])
+    assignment = lb.assign(_clients(rng.integers(2, 60, size=12)),
+                           old + [joined])
+    # … and the placement actually routes clients to it
+    assert len(assignment.per_worker[9]) > 0
+    assert not lb.used_fallback
+
+
+def test_join_unknown_type_still_falls_back_to_rr():
+    """A joining worker of a NEVER-seen type has no pooled telemetry to
+    bootstrap from: the placement must drop to RR until it warms up."""
+    lb = LearningBasedPlacement()
+    a40 = WorkerInfo(wid=0, type_name="a40")
+    for r in range(4):
+        for x in (5, 12, 30, 44):
+            lb.observe(r, a40, x, 0.05 * x + 1.0)
+    lb.refit(6)
+    assert lb.ready_for([a40])
+    new_type = WorkerInfo(wid=5, type_name="h100")
+    assert not lb.ready_for([a40, new_type])
+    lb.assign(_clients([4, 9, 17]), [a40, new_type])
+    assert lb.used_fallback
+
+
+def test_engine_join_mid_run_no_warmup_relapse():
+    """Engine-level: after warm-up, a same-type join must not push LB back
+    onto the RR fallback for any subsequent round."""
+    import jax
+
+    from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                            UniformSampler, make_placement)
+    from repro.data import make_federated_dataset
+    from repro.models.papertasks import make_task_model
+    from repro.optim import sgd
+
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
+                                batch_size=4, size_mu=2.5, size_sigma=0.8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=2)
+    eng = FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9), placement=make_placement("lb"),
+        sampler=UniformSampler(64, 8),
+        pool=WorkerPool.homogeneous(2, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(steps_cap=4, batch_size=4, pipeline_depth=1))
+    eng.pool.schedule(FailureEvent(round_idx=4, kind="join", wid=7,
+                                   type_name="a40", concurrency=2))
+    eng.run(4)
+    assert not eng.placement.used_fallback    # warmed up pre-join
+    eng.run(3)                                # join fires at round 4
+    assert 7 in eng.pool.workers
+    assert not eng.placement.used_fallback    # pooled same-type bootstrap
+
+
+# -- deadline_trim edge cases -------------------------------------------------
+
+def test_deadline_trim_empty_cohort():
+    assert deadline_trim([], 5) == []
+    assert deadline_trim([], 5, predict=lambda x: x) == []
+
+
+def test_deadline_trim_target_zero_and_oversized_target():
+    clients = _clients([3, 9, 5])
+    assert deadline_trim(clients, 0) == []
+    kept = deadline_trim(clients, 10)
+    assert kept == clients and kept is not clients   # copy, not alias
+
+
+def test_deadline_trim_all_stragglers_keeps_fastest_of_the_slow():
+    """Every client predicted monstrous: the round must still fill — trim
+    keeps the `target` least-bad, never returns an empty round."""
+    clients = _clients([40, 10, 25, 55])
+    pred = lambda xs: 1e6 + np.asarray(xs, dtype=np.float64)  # noqa: E731
+    kept = deadline_trim(clients, 2, predict=pred)
+    assert [c.n_batches for c in kept] == [10, 25]
+
+
+def test_deadline_trim_without_predictor_uses_batch_counts():
+    clients = _clients([40, 10, 25, 55])
+    kept = deadline_trim(clients, 2)
+    assert [c.n_batches for c in kept] == [10, 25]
+
+
+def test_oversample_cohort_restores_cohort_size_even_on_error():
+    class Sampler:
+        cohort_size = 8
+
+        def sample(self, t):
+            raise RuntimeError("boom")
+
+    s = Sampler()
+    with pytest.raises(RuntimeError):
+        oversample_cohort(s, 0, rho=0.5)
+    assert s.cohort_size == 8

@@ -70,3 +70,102 @@ def test_cli_roundtrip(tmp_path):
     bad["engine"]["depth1"]["recompiles"] = 9
     fresh.write_text(json.dumps(bad))
     assert main([str(base), str(fresh)]) == 1
+
+
+# -- the control-plane record -------------------------------------------------
+
+def _control_record():
+    return {
+        "benchmark": "control",
+        "refit": {"full_refit_ms": 11.0, "reuse_refit_ms": 1.5,
+                  "reuse_speedup_x": 7.3},
+        "barrier": {
+            "audit_violations": 0,
+            "reuse": {f"depth{d}": {"stall_fraction": 0.0} for d in (0, 1, 2)},
+            "stall": {"depth0": {"stall_fraction": 0.0},
+                      "depth1": {"stall_fraction": 0.0},
+                      "depth2": {"stall_fraction": 0.8}},
+        },
+        "scenario": {
+            "straggler": {"detected": True, "detect_delay": 1,
+                          "recovered": True},
+            "skew": {"false_drifts": 0},
+            "adapt": {"gain_x": 1.18},
+        },
+    }
+
+
+def test_control_identical_runs_pass():
+    from benchmarks.perf_gate import compare_control
+    assert compare_control(_control_record(), _control_record()) == []
+
+
+def test_control_each_regression_class_is_caught():
+    from benchmarks.perf_gate import compare_control
+    cases = [
+        ("audit violation",
+         lambda r: r["barrier"].__setitem__("audit_violations", 1)),
+        ("reuse policy stalled",
+         lambda r: r["barrier"]["reuse"]["depth2"].__setitem__(
+             "stall_fraction", 0.3)),
+        ("stall policy stalled at depth1",
+         lambda r: r["barrier"]["stall"]["depth1"].__setitem__(
+             "stall_fraction", 0.1)),
+        ("drift missed",
+         lambda r: r["scenario"]["straggler"].__setitem__("detected", False)),
+        ("drift slowed",
+         lambda r: r["scenario"]["straggler"].__setitem__("detect_delay", 9)),
+        ("no recovery",
+         lambda r: r["scenario"]["straggler"].__setitem__("recovered", False)),
+        ("false positives",
+         lambda r: r["scenario"]["skew"].__setitem__("false_drifts", 2)),
+        ("adaptation gain lost",
+         lambda r: r["scenario"]["adapt"].__setitem__("gain_x", 0.97)),
+        ("reuse fast path lost",
+         lambda r: r["refit"].__setitem__("reuse_speedup_x", 1.1)),
+        ("refit latency blowup",
+         lambda r: r["refit"].__setitem__("full_refit_ms", 60.0)),
+    ]
+    for name, mutate in cases:
+        fresh = copy.deepcopy(_control_record())
+        mutate(fresh)
+        assert compare_control(_control_record(), fresh), f"gate missed: {name}"
+
+
+def test_control_banded_metrics_tolerate_machine_noise():
+    from benchmarks.perf_gate import compare_control
+    fresh = _control_record()
+    fresh["refit"]["full_refit_ms"] = 25.0         # 2.3x: a slower CI box
+    fresh["barrier"]["stall"]["depth2"]["stall_fraction"] = 0.9  # timing
+    assert compare_control(_control_record(), fresh) == []
+
+
+def test_main_dispatches_on_benchmark_field(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_control_record()))
+    fresh.write_text(json.dumps(_control_record()))
+    assert main([str(base), str(fresh)]) == 0
+    bad = copy.deepcopy(_control_record())
+    bad["barrier"]["audit_violations"] = 3
+    fresh.write_text(json.dumps(bad))
+    assert main([str(base), str(fresh)]) == 1
+
+
+def test_main_refuses_mismatched_benchmark_kinds(tmp_path):
+    """Pipeline baseline vs control fresh would skip every baseline-relative
+    check and print PASS — the gate must refuse instead."""
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_record()))
+    fresh.write_text(json.dumps(_control_record()))
+    assert main([str(base), str(fresh)]) == 2
+
+
+def test_control_missing_scenario_key_reports_once():
+    from benchmarks.perf_gate import compare_control
+    fresh = copy.deepcopy(_control_record())
+    del fresh["scenario"]["straggler"]["detected"]
+    failures = compare_control(_control_record(), fresh)
+    assert [f for f in failures if "missing" in f]
+    assert not [f for f in failures if "not detected" in f]
