@@ -18,6 +18,11 @@ paper's idle-time argument applied to the simulator itself):
   share memory, so the saved bytes buy no wall time here (the cache costs
   an extra fused scatter pass); hit rate and bytes/round are the metrics
   that transfer to accelerators with a real host↔device interconnect.
+* **mesh**: the same skewed workload executed as per-worker device
+  programs over 1/2/4 mesh shards (shard count 1 = the fused program) —
+  losses asserted bit-identical across shard counts, per-shard cache-pool
+  accounting (must sum to the global counters), and the worker-step
+  compile count (all workers share ONE executable per S bucket).
 
 Emits machine-readable JSON (default ``BENCH_pipeline.json`` at the repo
 root, override with ``POLLEN_BENCH_OUT``) so future PRs get a perf
@@ -102,7 +107,8 @@ def _pack_comparison(*, cohort: int, workers: int, rounds: int) -> dict:
     }
 
 
-def _build_engine(*, depth: int, sampler=None, device_cache: int = 0):
+def _build_engine(*, depth: int, sampler=None, device_cache: int = 0,
+                  mesh: int = 0):
     import jax
 
     from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
@@ -123,7 +129,8 @@ def _build_engine(*, depth: int, sampler=None, device_cache: int = 0):
         pool=WorkerPool.homogeneous(4, type_name="a40", concurrency=2),
         telemetry=SyntheticTelemetry(),
         config=EngineConfig(steps_cap=8, batch_size=8, pipeline_depth=depth,
-                            device_cache_batches=device_cache))
+                            device_cache_batches=device_cache,
+                            mesh_workers=mesh))
 
 
 def _engine_comparison(*, rounds: int) -> dict:
@@ -189,15 +196,62 @@ def _cache_comparison(*, rounds: int, capacity: int = 768) -> dict:
     return out
 
 
+def _mesh_comparison(*, rounds: int, capacity: int = 768) -> dict:
+    """Per-worker device programs over 1/2/4 mesh shards (shard count 1 =
+    the fused single program) on the Zipf workload with the device cache
+    on: losses must be bit-identical at every shard count; per-shard pool
+    accounting must sum to the global counters; the per-worker programs
+    must share ONE compiled executable (bounded worker-step compiles)."""
+    from repro.core import ZipfSampler
+
+    out = {}
+    losses = {}
+    for mesh in (0, 2, 4):
+        eng = _build_engine(depth=1, mesh=mesh,
+                            sampler=ZipfSampler(256, 32, a=1.2),
+                            device_cache=capacity)
+        eng.run(4)     # warm the step + gather/assembly shape buckets
+        t0 = time.perf_counter()
+        res = eng.run(rounds)
+        wall = time.perf_counter() - t0
+        losses[mesh] = [r.loss for r in res]
+        tag = "fused" if mesh == 0 else f"shards{mesh}"
+        entry = {
+            "rounds": rounds,
+            "wall_s_per_round": wall / rounds,
+            "hit_rate": float(np.mean([r.cache_hit_rate for r in res])),
+        }
+        if mesh:
+            cs = eng.cache_stats
+            ws = eng.compile_stats["worker_step"]
+            entry["worker_step_compiles"] = ws["compiles"]
+            entry["worker_step_hits"] = ws["hits"]
+            entry["per_shard"] = [
+                {k: s[k] for k in ("hit_steps", "miss_steps", "insertions",
+                                   "evictions", "bytes_saved",
+                                   "capacity_rows")}
+                for s in cs["per_shard"]]
+            entry["per_shard_sums_to_global"] = all(
+                sum(s[k] for s in cs["per_shard"]) == cs[k]
+                for k in ("hit_steps", "miss_steps", "insertions",
+                          "evictions", "bytes_saved"))
+        out[tag] = entry
+    # the mesh decomposition is a scheduling/measurement change only
+    assert losses[0] == losses[2] == losses[4], "shard counts disagree"
+    out["losses_identical"] = True
+    return out
+
+
 def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
         engine_rounds: int = 8) -> list[str]:
     pack = _pack_comparison(cohort=cohort, workers=workers,
                             rounds=pack_rounds)
     engine = _engine_comparison(rounds=engine_rounds)
     cache = _cache_comparison(rounds=engine_rounds)
+    mesh = _mesh_comparison(rounds=engine_rounds)
 
     record = {"benchmark": "pipeline", "pack": pack, "engine": engine,
-              "device_cache": cache}
+              "device_cache": cache, "mesh": mesh}
     out_path = os.environ.get(
         "POLLEN_BENCH_OUT",
         os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json"))
@@ -224,6 +278,12 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
                 f"{cache['on']['hit_rate']:.2f}")
     rows.append(f"bench_pipeline,cache_bytes_saved_per_round,"
                 f"{cache['on']['bytes_saved_per_round']:.0f}")
+    for tag in ("shards2", "shards4"):
+        m = mesh[tag]
+        rows.append(f"bench_pipeline,mesh_{tag}_hit_rate,"
+                    f"{m['hit_rate']:.2f}")
+        rows.append(f"bench_pipeline,mesh_{tag}_worker_step_compiles,"
+                    f"{m['worker_step_compiles']}")
     # acceptance: the vectorized pack must at least halve host pack+pad time
     assert pack["speedup_x"] >= 2.0, pack
     # acceptance: deepening the pipeline never hides LESS of the pack

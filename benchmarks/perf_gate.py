@@ -106,6 +106,41 @@ def compare(
                 f"{base:.2f} (slack {hit_rate_slack})",
             )
 
+    # -- machine-independent: mesh execution ---------------------------------
+    ident = require("mesh.losses_identical")
+    if ident is not None:
+        check(bool(ident), "mesh shard counts changed training losses")
+    for tag in ("shards2", "shards4"):
+        sums = require(f"mesh.{tag}.per_shard_sums_to_global")
+        if sums is not None:
+            check(
+                bool(sums),
+                f"mesh {tag}: per-shard cache accounting does not sum to the global stats",
+            )
+        comp = require(f"mesh.{tag}.worker_step_compiles")
+        if comp is not None:
+            # one executable serves every worker; distinct S buckets are the
+            # only legitimate source of extra compiles
+            check(
+                comp <= 8,
+                f"mesh {tag}: {comp} worker-step compiles — the shared-executable "
+                f"property broke (expected O(log S), <= 8)",
+            )
+            base = _get(baseline, f"mesh.{tag}.worker_step_compiles")
+            if base is not None:
+                check(
+                    comp <= base,
+                    f"mesh {tag}: worker-step compiles grew: {comp} vs baseline {base}",
+                )
+        hit = require(f"mesh.{tag}.hit_rate")
+        base_hit = _get(baseline, f"mesh.{tag}.hit_rate")
+        if hit is not None and base_hit is not None:
+            check(
+                hit >= base_hit - hit_rate_slack,
+                f"mesh {tag}: hit rate {hit:.2f} regressed vs baseline "
+                f"{base_hit:.2f} (slack {hit_rate_slack})",
+            )
+
     # -- cross-run timing band ----------------------------------------------
     pack_s = require("pack.vectorized_pack_s_per_round")
     base_s = _get(baseline, "pack.vectorized_pack_s_per_round")

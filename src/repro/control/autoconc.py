@@ -10,10 +10,14 @@ controller that works online: coordinate-ascent hill climbing on measured
 round throughput.
 
 Every ``interval`` rounds it finalizes the mean throughput of the closing
-window, compares it against the previous window, and nudges **one** worker
-type's slot count by ±1 (round-robin over types, so concurrent knobs never
+window, compares it against the previous window, and nudges **one** knob's
+slot count by ±1 (round-robin over knobs, so concurrent knobs never
 fight): keep the direction while throughput improves by at least
-``min_gain``, reverse when it stops.  Slot counts stay inside
+``min_gain``, reverse when it stops.  A *knob* is one worker type by
+default; under the control plane's ``adapt_granularity="worker"`` (the
+mesh path's per-worker telemetry makes this meaningful) every worker id
+gets its own knob — states are keyed by opaque strings, so both
+granularities share this climber unchanged.  Slot counts stay inside
 ``[min_slots, max_slots]`` — seed ``max_slots`` from
 :func:`repro.core.concurrency.estimate_slots_analytic` (HBM budget) or
 :func:`~repro.core.concurrency.gpu_concurrency_probe` (VRAM rule) so the
@@ -35,7 +39,7 @@ __all__ = ["AdaptiveConcurrency", "SlotState"]
 
 @dataclass
 class SlotState:
-    """Hill-climb state for one worker type."""
+    """Hill-climb state for one knob (a worker type, or one worker id)."""
 
     slots: int
     direction: int = 1
@@ -50,7 +54,8 @@ class SlotState:
 
 @dataclass
 class AdaptiveConcurrency:
-    """Coordinate-ascent hill climber over per-type client slots."""
+    """Coordinate-ascent hill climber over per-knob client slots (knobs are
+    worker types, or individual workers under per-worker granularity)."""
 
     interval: int = 5  # rounds per decision window
     min_slots: int = 1

@@ -61,6 +61,7 @@ class ControllerConfig:
     adapt_min_slots: int = 1
     adapt_max_slots: int = 64
     adapt_min_gain: float = 0.0
+    adapt_granularity: str = "type"  # "type" | "worker" (per-wid slots)
 
     def __post_init__(self):
         if self.telemetry_mode not in ("synthetic", "measured"):
@@ -82,6 +83,10 @@ class ControllerConfig:
             raise ValueError(f"drift_threshold must be >= 0, got {self.drift_threshold}")
         if self.adapt_interval < 0:
             raise ValueError(f"adapt_interval must be >= 0, got {self.adapt_interval}")
+        if self.adapt_granularity not in ("type", "worker"):
+            raise ValueError(
+                f"adapt_granularity must be 'type' or 'worker', got {self.adapt_granularity!r}"
+            )
 
 
 @dataclass
@@ -130,11 +135,22 @@ class ControlPlane:
         self.fallback_placement = BatchesBasedPlacement()
         self.fallback_rounds = 0
         self.log: list = []  # (round, kind, detail)
+        # Per-worker residual EWMAs (mesh path: |meas - pred| / pred of each
+        # worker's exact wall time) — observability for which worker drifts.
+        self.worker_residuals: dict = {}  # wid -> ewma
         if self.autoconc is not None and pool is not None:
-            # Seed each type at its current (estimated) slot count — the
+            # Seed each knob at its current (estimated) slot count — the
             # engine's pool carries the Table-3 / analytic-estimate values.
+            # Granularity "worker" gives every wid its own knob (follow-on
+            # (d): per-worker rather than per-type slots — the hill climb
+            # still scores the shared round-throughput objective).
             for w in pool.workers.values():
-                self.autoconc.seed(w.type_name, w.concurrency)
+                self.autoconc.seed(self._slot_key(w.type_name, w.wid), w.concurrency)
+
+    def _slot_key(self, type_name: str, wid) -> str:
+        if self.cfg.adapt_granularity == "worker":
+            return f"w{int(wid)}"
+        return type_name
 
     # -- producer side (strict round order) ----------------------------------
     def pre_round(self, t: int) -> PreRound:
@@ -146,9 +162,9 @@ class ControlPlane:
             info.stall_s, info.stalled = out.stall_s, out.stalled
             self._ingest_measured(t, out)
         if self.autoconc is not None:
-            for tname, old, new in self.autoconc.maybe_update(t):
-                self._apply_slots(tname, new)
-                self.log.append((t, "slots", f"{tname}: {old} -> {new}"))
+            for key, old, new in self.autoconc.maybe_update(t):
+                self._apply_slots(key, new)
+                self.log.append((t, "slots", f"{key}: {old} -> {new}"))
         if self.drift is not None and self.drift.drifted:
             info.fallback = True
             self.fallback_rounds += 1
@@ -162,6 +178,17 @@ class ControlPlane:
                 self.placement.observe_type(rnd, tname, x, sec)
         if self.drift is not None:
             self._update_drift(t, by_type)
+        # Mesh path: fold each worker's exact (predicted, measured) pair
+        # into its residual EWMA — which *worker* mispredicts, not just
+        # which type.  Producer-side, round order (rides the same flush).
+        for _, wid, _, pred_s, meas_s in out.worker_meta:
+            if pred_s > 0:
+                err = abs(meas_s - pred_s) / pred_s
+                prev = self.worker_residuals.get(wid)
+                alpha = 2.0 / (self.cfg.drift_window + 1.0)
+                self.worker_residuals[wid] = (
+                    err if prev is None else (1 - alpha) * prev + alpha * err
+                )
         if self.autoconc is not None:
             for _, exec_s, n_steps, _ in out.round_meta:
                 if exec_s > 0:
@@ -192,11 +219,19 @@ class ControlPlane:
             ts = np.asarray([p[1] for p in pairs], dtype=np.float64)
             self.drift.update(t, tname, relative_errors(model.predict(xs), ts))
 
-    def _apply_slots(self, type_name: str, slots: int) -> None:
+    def _apply_slots(self, key: str, slots: int) -> None:
+        """Apply a slot move: ``key`` is a type name (granularity "type")
+        or ``"w<wid>"`` (granularity "worker")."""
         if self.pool is None:
             return
+        if self.cfg.adapt_granularity == "worker":
+            wid = int(key[1:])
+            w = self.pool.workers.get(wid)
+            if w is not None:
+                self.pool.workers[wid] = replace(w, concurrency=slots)
+            return
         for wid, w in list(self.pool.workers.items()):
-            if w.type_name == type_name:
+            if w.type_name == key:
                 self.pool.workers[wid] = replace(w, concurrency=slots)
 
     def on_pool_events(self, t: int, events) -> None:
@@ -207,19 +242,26 @@ class ControlPlane:
         ``tests/test_elastic.py``.)"""
         for e in events:
             tname = getattr(e, "type_name", "default")
+            wid = getattr(e, "wid", -1)
             if self.drift is not None:
                 self.drift.reset(tname, t)
+            if e.kind == "fail":
+                self.worker_residuals.pop(wid, None)
             if self.autoconc is not None:
+                key = self._slot_key(tname, wid)
                 if e.kind == "join":
-                    self.autoconc.seed(tname, getattr(e, "concurrency", 1))
-                    # A join into an already-tuned type must run at the
+                    self.autoconc.seed(key, getattr(e, "concurrency", 1))
+                    # A join into an already-tuned knob must run at the
                     # climber's current slot count, not the event's guess —
                     # mixed concurrency would skew the next window's
                     # throughput comparison.  (seed() is a no-op for known
-                    # types, so this is the only place that aligns it.)
-                    tuned = self.autoconc.slots_for(tname)
+                    # keys, so this is the only place that aligns it.)
+                    tuned = self.autoconc.slots_for(key)
                     if tuned is not None:
-                        self._apply_slots(tname, tuned)
+                        self._apply_slots(key, tuned)
+                elif self.cfg.adapt_granularity == "worker":
+                    # The failed worker's knob is gone with it.
+                    self.autoconc.forget(key)
                 elif self.pool is not None and not any(
                     w.type_name == tname for w in self.pool.workers.values()
                 ):
@@ -227,15 +269,22 @@ class ControlPlane:
             self.log.append((t, e.kind, tname))
 
     # -- consumer side -------------------------------------------------------
-    def round_executed(self, t: int, exec_s: float, shares, n_steps: int, *, rows=None) -> None:
+    def round_executed(
+        self, t: int, exec_s: float, shares, n_steps: int, *, rows=None, worker_times=None
+    ) -> None:
         """Consumer hook, called right after round ``t``'s device sync.
 
         ``rows`` carries exact per-client ``(worker_type, x, seconds)``
         measurements when the caller has them (real clusters, the simcluster
-        harness); otherwise ``exec_s`` is attributed across ``shares``."""
+        harness); ``worker_times`` carries the mesh path's exact per-worker
+        ``(wid, worker_type, xs, pred_s, meas_s)`` entries (one per synced
+        worker program).  Only without either does ``exec_s`` fall back to
+        predicted-share attribution across ``shares``."""
         if self.measured is None:
             return
-        if rows is not None:
+        if worker_times is not None:
+            self.measured.record_worker_times(t, worker_times, exec_s=exec_s, n_steps=n_steps)
+        elif rows is not None:
             self.measured.record_rows(t, rows, exec_s=exec_s)
         else:
             self.measured.record(t, exec_s, shares, n_steps)
@@ -281,6 +330,11 @@ class ControlPlane:
             out["audit_violations"] = len(self.audit())
         if self.drift is not None:
             out["drift"] = self.drift.stats()
+        if self.worker_residuals:
+            out["worker_residuals"] = {
+                int(w): float(e) for w, e in sorted(self.worker_residuals.items())
+            }
         if self.autoconc is not None:
             out["concurrency"] = self.autoconc.stats()
+            out["adapt_granularity"] = self.cfg.adapt_granularity
         return out

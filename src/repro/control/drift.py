@@ -19,6 +19,13 @@ caught up and the EWMA has recovered below
 ``threshold * recover_fraction`` (hysteresis, so the placement does not
 flap).  Pool fail/join events reset the affected type's statistics: a
 changed pool invalidates the evidence, not the model.
+
+On the mesh execution path the residuals feeding this detector derive from
+**exact per-worker wall times** (one device sync per worker program)
+rather than round-level attribution, and the control plane additionally
+keeps a per-*worker* residual EWMA (``ControlPlane.worker_residuals``) so
+a single degraded worker is visible even when its type's pooled EWMA
+stays calm.
 """
 
 from __future__ import annotations

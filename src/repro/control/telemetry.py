@@ -13,6 +13,14 @@ that keeps the paper's refit protocol honest at any ``pipeline_depth``:
   attribution described in ``repro.core.telemetry``; exact per-client rows
   via :meth:`record_rows` when a real cluster / the simcluster harness has
   them) and marks round ``t`` *finished*.
+* :meth:`MeasuredTelemetry.record_worker_times` — the mesh-execution path
+  (``EngineConfig.mesh_workers``): the engine syncs one device program per
+  worker, so each worker's wall time is **measured exactly** on any
+  backend; only the split *within* a worker (t_w over its clients,
+  proportional to batch count) is interpolated.  The round-level
+  predicted-share attribution path is then unused — ``rows_attributed``
+  stays 0, test-enforced — and per-worker (predicted, measured) pairs ride
+  the barrier for drift accounting.
 * :meth:`MeasuredTelemetry.flush` — producer side, called at the start of
   preparing round ``u``: releases only rows from rounds that have already
   finished executing.  Policy ``"stall"`` blocks until round ``u - 2`` (the
@@ -44,6 +52,8 @@ class FlushResult:
     round_idx: int  # the round being prepared
     rows: list  # [(round, worker_type, x, seconds)] newly released
     round_meta: list  # [(round, exec_s, n_steps, n_clients)] newly released
+    worker_meta: list = field(default_factory=list)
+    # [(round, wid, worker_type, pred_s, meas_s)] — mesh path only
     stall_s: float = 0.0
     stalled: bool = False
 
@@ -74,6 +84,8 @@ class MeasuredTelemetry:
     flushes: int = 0
     rows_recorded: int = 0
     rows_flushed: int = 0
+    rows_attributed: int = 0  # via predicted-share attribution (record)
+    rows_exact: int = 0  # via exact measurement (record_rows / worker times)
     finish_seq: dict = field(default_factory=dict)  # round -> seq
     prep_seq: dict = field(default_factory=dict)  # round -> seq
     audit: list = field(default_factory=list)  # [_AuditEntry]
@@ -84,6 +96,7 @@ class MeasuredTelemetry:
         self._cond = threading.Condition()
         self._pending_rows: list = []  # [(round, type, x, t)]
         self._pending_meta: list = []  # [(round, exec_s, n_steps, n_clients)]
+        self._pending_workers: list = []  # [(round, wid, type, pred, meas)]
         self._seq = 0
         self._aborted = False
 
@@ -102,7 +115,7 @@ class MeasuredTelemetry:
         if total > 0:
             for tname, x, s in shares:
                 rows.append((round_idx, tname, float(x), exec_s * s / total))
-        self._finish(round_idx, rows, exec_s, n_steps, len(shares))
+        self._finish(round_idx, rows, exec_s, n_steps, len(shares), exact=False)
 
     def record_rows(self, round_idx: int, rows, *, exec_s: float | None = None) -> None:
         """Record exact per-client rows ``[(worker_type, x, seconds)]`` — the
@@ -112,8 +125,40 @@ class MeasuredTelemetry:
         total = exec_s if exec_s is not None else sum(r[3] for r in rows)
         self._finish(round_idx, rows, float(total), len(rows), len(rows))
 
-    def _finish(self, round_idx, rows, exec_s, n_steps, n_clients) -> None:
+    def record_worker_times(
+        self, round_idx: int, workers, *, exec_s: float, n_steps: int
+    ) -> None:
+        """Record exact per-worker wall times (the mesh execution path).
+
+        ``workers`` is ``[(wid, worker_type, xs, pred_s, meas_s)]`` — one
+        entry per worker program the engine synced: ``xs`` the batch counts
+        of that worker's clients, ``pred_s`` its predicted (prepare-time)
+        load, ``meas_s`` its measured wall time.  Each worker's time is
+        split over its own clients proportionally to batch count — the
+        worker-level total is exact; no prediction enters the split.  The
+        per-worker (pred, meas) pairs are buffered alongside and released
+        by the same barrier flush, feeding per-worker drift residuals.
+        """
+        rows, wmeta = [], []
+        for wid, tname, xs, pred_s, meas_s in workers:
+            xs = [float(x) for x in xs]
+            total_x = sum(xs)
+            if total_x > 0:
+                for x in xs:
+                    rows.append((round_idx, str(tname), x, float(meas_s) * x / total_x))
+            wmeta.append((round_idx, int(wid), str(tname), float(pred_s), float(meas_s)))
+        self._finish(round_idx, rows, float(exec_s), int(n_steps), len(rows), workers=wmeta)
+
+    def _finish(
+        self, round_idx, rows, exec_s, n_steps, n_clients, *, exact=True, workers=None
+    ) -> None:
         with self._cond:
+            if exact:
+                self.rows_exact += len(rows)
+            else:
+                self.rows_attributed += len(rows)
+            if workers:
+                self._pending_workers.extend(workers)
             self._pending_rows.extend(rows)
             self._pending_meta.append((round_idx, float(exec_s), int(n_steps), int(n_clients)))
             self.rows_recorded += len(rows)
@@ -152,7 +197,7 @@ class MeasuredTelemetry:
                         f"{self.last_finished})"
                     )
             allowed = self.last_finished
-            keep_rows, keep_meta = [], []
+            keep_rows, keep_meta, keep_workers = [], [], []
             released = set()
             for r in self._pending_rows:
                 if r[0] <= allowed:
@@ -166,8 +211,14 @@ class MeasuredTelemetry:
                     released.add(m[0])
                 else:
                     keep_meta.append(m)
+            for w in self._pending_workers:
+                if w[0] <= allowed:
+                    out.worker_meta.append(w)
+                else:
+                    keep_workers.append(w)
             self._pending_rows = keep_rows
             self._pending_meta = keep_meta
+            self._pending_workers = keep_workers
             self.rows_flushed += len(out.rows)
             self.flushes += 1
             self._seq += 1
@@ -211,6 +262,7 @@ class MeasuredTelemetry:
         with self._cond:
             self._pending_rows = []
             self._pending_meta = []
+            self._pending_workers = []
             self._aborted = False
             self.last_finished = round_idx - 1
             self.audit = []
@@ -230,6 +282,8 @@ class MeasuredTelemetry:
             "stall_s_total": self.stall_s_total,
             "rows_recorded": self.rows_recorded,
             "rows_flushed": self.rows_flushed,
+            "rows_attributed": self.rows_attributed,
+            "rows_exact": self.rows_exact,
             "pending_rows": len(self._pending_rows),
             "last_finished": self.last_finished,
         }

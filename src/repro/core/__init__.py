@@ -10,7 +10,8 @@ from .concurrency import (ConcurrencyEstimate, DeviceSpec,
 from .engine import EngineConfig, FederatedEngine, RoundResult, s_bucket
 from .placement import (Assignment, BatchesBasedPlacement, ClientInfo,
                         LearningBasedPlacement, Placement,
-                        RoundRobinPlacement, WorkerInfo, make_placement)
+                        RoundRobinPlacement, WorkerInfo, apply_cache_affinity,
+                        make_placement)
 from .sampling import (DeadlineFilter, PowerOfChoiceSampler, UniformSampler,
                        ZipfSampler, restore_sampler, sampler_state)
 from .telemetry import GPUProfile, SyntheticTelemetry, TelemetryStore
@@ -24,6 +25,7 @@ __all__ = [
     "PartialAggregate", "Placement", "PowerOfChoiceSampler", "RoundResult",
     "RoundRobinPlacement", "SyntheticTelemetry", "TelemetryStore",
     "TrainingTimeModel", "UniformSampler", "WorkerInfo", "ZipfSampler",
+    "apply_cache_affinity",
     "estimate_slots_analytic", "estimate_slots_from_memory_analysis",
     "fedavg_flat", "fedmedian", "fit_linear", "fit_log_linear",
     "fold_clients", "gpu_concurrency_probe", "make_placement",

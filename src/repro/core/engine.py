@@ -69,6 +69,23 @@ its hill climber retunes per-type worker concurrency online; both act
 producer-side in round order, so synthetic-mode runs stay bit-identical
 across pipeline depths even with the controller enabled.
 
+Mesh execution (``EngineConfig.mesh_workers = K >= 2``): the round runs as
+**one device program per FL worker** over K mesh shards instead of one
+fused step.  The packer partitions the cohort's plan by worker
+(``split_plan_by_worker``), each worker's ``[1, P, S]`` block is H2D'd to
+its shard's device (``WorkerShardMap``: ``wid % K``, stable under churn),
+the per-worker programs — ONE shared compiled executable, since every
+worker uses the round's bucketed S — are dispatched asynchronously and
+**synced individually**, and a separate combine program reduces the
+concatenated lane partials with exactly the fused step's tail.  Losses are
+bit-identical across shard counts 1/2/4 at any pipeline depth
+(test-enforced; shard count 1 IS the fused single-program path), while the
+per-worker syncs give ``MeasuredTelemetry`` exact per-worker wall times on
+any backend — the round-level predicted-share attribution path is unused —
+and the device cache splits into per-shard pools with optional cache-aware
+placement (``cache_affinity``: load-neutral equal-batch/equal-type swaps
+toward the shard holding a client's rows).
+
 The number of distinct compiled programs is bounded by bucketing the stream
 length S to the next {1x, 1.5x} power-of-two multiple (beyond-paper
 optimization "S-bucketing": O(log S) shapes, padding overhead strictly
@@ -84,17 +101,22 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.placement import (Assignment, ClientInfo,
-                                  LearningBasedPlacement, Placement)
+                                  LearningBasedPlacement, Placement,
+                                  apply_cache_affinity)
 from repro.core.sampling import restore_sampler, sampler_state
 from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
                                  build_round_masks, gather_content_rows,
-                                 padding_stats, plan_round)
+                                 padding_stats, plan_round,
+                                 split_plan_by_worker)
 from repro.data.device_cache import CachePlan, DeviceBatchCache
-from repro.fl.round import (StepCompileCache, make_gather_round_step,
-                            make_round_step)
+from repro.distributed.sharding import WorkerShardMap
+from repro.fl.round import (StepCompileCache, make_combine_step,
+                            make_gather_round_step, make_round_step,
+                            make_worker_round_step)
 from repro.fl.strategy import FedAvg, Strategy
 
 
@@ -141,6 +163,7 @@ class RoundResult:
     exec_time: float = 0.0         # measured device-execution wall seconds
     barrier_stall_s: float = 0.0   # producer stall at the refit barrier
     drift_fallback: bool = False   # placed by the BB fallback (drift alarm)
+    affinity_swaps: int = 0        # cache-affinity client swaps this round
 
 
 @dataclass
@@ -160,6 +183,10 @@ class EngineConfig:
     donate_buffers: bool = True   # donate params+batches into the step
     device_cache_batches: int = 0  # HBM rows pinned for hot clients; 0 = off
     device_cache_bytes: int = 0    # HBM cache capacity in bytes; 0 = off
+    # -- mesh execution (per-worker device programs) -----------------------
+    mesh_workers: int = 0          # 0/1 = one fused program; K >= 2 = one
+    #                                program per worker over K mesh shards
+    cache_affinity: bool = False   # prefer the shard holding a client's rows
     # -- control plane (repro.control): any non-default knob enables it ----
     telemetry_mode: str = "synthetic"   # "synthetic" | "measured"
     barrier_policy: str = "reuse"       # "reuse" | "stall" (measured mode)
@@ -167,6 +194,7 @@ class EngineConfig:
     drift_window: int = 16
     adapt_interval: int = 0             # rounds per hill-climb move; 0 = off
     adapt_max_slots: int = 64
+    adapt_granularity: str = "type"     # "type" | "worker" (per-wid slots)
 
     def __post_init__(self):
         depth = self.pipeline_depth
@@ -179,6 +207,21 @@ class EngineConfig:
         if self.device_cache_bytes < 0:
             raise ValueError("device_cache_bytes must be >= 0, got "
                              f"{self.device_cache_bytes!r}")
+        if not isinstance(self.mesh_workers, int) or self.mesh_workers < 0:
+            raise ValueError("mesh_workers must be an int >= 0, got "
+                             f"{self.mesh_workers!r}")
+        if self.cache_affinity:
+            if self.mesh_workers < 2:
+                raise ValueError(
+                    "cache_affinity requires mesh_workers >= 2 (with one "
+                    "shard there is no 'other' pool to prefer)")
+            if self.device_cache_batches <= 0 and self.device_cache_bytes <= 0:
+                raise ValueError(
+                    "cache_affinity requires an enabled device cache "
+                    "(device_cache_batches or device_cache_bytes)")
+        if self.adapt_granularity not in ("type", "worker"):
+            raise ValueError("adapt_granularity must be 'type' or 'worker', "
+                             f"got {self.adapt_granularity!r}")
         if self.compile_cache_size < 1:
             raise ValueError("compile_cache_size must be >= 1, got "
                              f"{self.compile_cache_size!r}")
@@ -219,7 +262,9 @@ class _PreparedRound:
     workers: list
     assignment: Assignment
     arrays: RoundArrays
-    device: tuple            # (batches, step_mask, boundary, weight) on device
+    device: tuple | None     # (batches, step_mask, boundary, weight) on
+    #                          device — None on the mesh path (per-worker
+    #                          bundles live in worker_programs instead)
     pack_s: float            # host pack time (plan + gather + scatter)
     makespan: float          # simulated/predicted round time (prepare time)
     idle_time: float
@@ -230,8 +275,16 @@ class _PreparedRound:
     stall_s: float = 0.0     # producer stall at the refit barrier
     fallback: bool = False   # placed by the drift fallback (BB)
     sampler_st: dict | None = None  # RNG/config snapshot after this sample
+    telemetry_st: dict | None = None  # synthetic-telemetry RNG snapshot
     exec_t0: float = 0.0     # consumer-set: execution dispatch timestamp
     exec_s: float = 0.0      # measured execution wall time (consumer-set)
+    # -- mesh execution (per-worker device programs) -----------------------
+    worker_programs: list | None = None
+    # [(wid, type_name, shard, device_arrays, cache_plan, xs, pred_s)]
+    combine_masks: tuple | None = None  # full (mask, boundary, weight) on dev
+    affinity_swaps: int = 0  # cache-affinity swap count this round
+    worker_times: list | None = None
+    # consumer-set: [(wid, type_name, xs, pred_s, meas_s)]
 
 
 class FederatedEngine:
@@ -266,6 +319,7 @@ class FederatedEngine:
         # rejects negative depths.)
         self._pack_buffers = PackBuffers(depth=config.pipeline_depth + 1)
         self._sampler_ckpt_state = None
+        self._telemetry_ckpt_state = None
         if config.control_enabled:
             # Deferred import: repro.control imports repro.core.placement,
             # so a module-level import here would cycle through the package.
@@ -278,10 +332,35 @@ class FederatedEngine:
                     drift_threshold=config.drift_threshold,
                     drift_window=config.drift_window,
                     adapt_interval=config.adapt_interval,
-                    adapt_max_slots=config.adapt_max_slots),
+                    adapt_max_slots=config.adapt_max_slots,
+                    adapt_granularity=config.adapt_granularity),
                 placement=placement, pool=pool)
         else:
             self.control = None
+        # Mesh execution: one device program per worker over K shards
+        # (mesh_workers <= 1 keeps the single fused program — the 1-shard
+        # special case IS that program).
+        self._mesh_shards = (config.mesh_workers
+                             if config.mesh_workers >= 2 else 0)
+        self._shard_devices = []
+        if self._mesh_shards:
+            if not strategy.associative:
+                raise ValueError(
+                    "mesh_workers >= 2 requires an associative strategy: "
+                    "the gather path ships every client model and reduces "
+                    "host-side in one shot — it has no per-worker partials "
+                    "to combine")
+            from repro.launch.mesh import fl_shard_devices
+            devs = fl_shard_devices(self._mesh_shards)
+            if len(set(devs)) == 1 and devs[0] == jax.devices()[0]:
+                # Single-device host: every shard resolves to the default
+                # device anyway — leave arrays UNCOMMITTED (device=None) so
+                # jit sees the same arg shardings as the fused path and
+                # never silently recompiles between rounds 0 and 1 (an
+                # explicitly committed input changes the lowering key once
+                # params become jit outputs).
+                devs = []
+            self._shard_devices = devs
         cache_rows = config.device_cache_batches
         row_bytes = 0
         if config.device_cache_bytes > 0:
@@ -293,7 +372,9 @@ class FederatedEngine:
             DeviceBatchCache(cache_rows,
                              capacity_bytes=config.device_cache_bytes,
                              row_bytes=row_bytes,
-                             compile_cache_size=config.compile_cache_size)
+                             compile_cache_size=config.compile_cache_size,
+                             n_shards=self._mesh_shards or 1,
+                             devices=self._shard_devices)
             if (cache_rows > 0 or config.device_cache_bytes > 0) else None)
         donate = "all" if config.donate_buffers else "none"
         step_donate_argnums = None
@@ -320,12 +401,58 @@ class FederatedEngine:
                 donate_argnums=step_donate_argnums)
             self._gather_step = None
             self._step_cache = self._round_step
+        self._worker_step = None
+        self._combine_step = None
+        if self._mesh_shards:
+            # Per-worker programs share ONE executable (every worker is a
+            # [1, P, S] block at the round's bucketed S) + one combine.
+            worker_donate = None
+            if config.donate_buffers:
+                # Batches donate unless they are the device cache's
+                # persistent per-worker round base; masks always donate.
+                # Params (argnum 0) never donate here — every worker
+                # program and the combine read them.
+                worker_donate = ((2, 3, 4) if self._device_cache is not None
+                                 else (1, 2, 3, 4))
+            self._worker_step = StepCompileCache(
+                lambda: make_worker_round_step(loss_fn, optimizer,
+                                               agg_impl=config.agg_impl,
+                                               grad_clip=config.grad_clip),
+                capacity=config.compile_cache_size, donate="none",
+                donate_argnums=worker_donate)
+            self._combine_step = StepCompileCache(
+                lambda: make_combine_step(),
+                capacity=config.compile_cache_size, donate="none",
+                donate_argnums=(0,) if config.donate_buffers else ())
+        # Persistent per-shard sync pool (engine lifetime): spawning and
+        # joining an executor inside every round's _execute_mesh would add
+        # thread churn to exactly the window measured as exec_s.
+        self._sync_pool = (
+            ThreadPoolExecutor(max_workers=self._mesh_shards,
+                               thread_name_prefix="pollen-sync")
+            if self._mesh_shards else None)
 
     # -- helpers -------------------------------------------------------------
     @property
+    def _compiles_total(self) -> int:
+        n = self._step_cache.compiles
+        if self._worker_step is not None:
+            n += self._worker_step.compiles + self._combine_step.compiles
+        return n
+
+    @property
     def compile_stats(self) -> dict:
-        """Recompile/eviction/hit counters of the round-step cache."""
-        return self._step_cache.stats()
+        """Recompile/eviction/hit counters of the round-step cache(s).  On
+        the mesh path the totals fold in the per-worker and combine
+        programs (also broken out under ``worker_step`` / ``combine_step``)."""
+        stats = self._step_cache.stats()
+        if self._worker_step is not None:
+            ws, cs = self._worker_step.stats(), self._combine_step.stats()
+            for k in ("compiles", "evictions", "hits", "entries"):
+                stats[k] = stats[k] + ws[k] + cs[k]
+            stats["worker_step"] = ws
+            stats["combine_step"] = cs
+        return stats
 
     @property
     def cache_stats(self) -> dict:
@@ -359,10 +486,12 @@ class FederatedEngine:
                           n_samples=self.dataset.n_samples(cid))
 
     def _accumulate_loads(self, assignment: Assignment, workers, time_fn
-                          ) -> tuple[float, float, list]:
+                          ) -> tuple[float, float, list, dict]:
         """Fold ``time_fn(worker, client)`` over the assignment; return
-        (makespan, idle_time, rows) with rows = [(type, n_batches, t_c)] in
-        iteration order (the order every consumer depends on)."""
+        (makespan, idle_time, rows, loads) with rows = [(type, n_batches,
+        t_c)] in iteration order (the order every consumer depends on) and
+        loads = per-wid concurrency-scaled totals (the per-worker predicted
+        times the mesh path compares measurements against)."""
         by_wid = {w.wid: w for w in workers}
         loads: dict[int, float] = {}
         rows: list = []
@@ -376,7 +505,7 @@ class FederatedEngine:
             loads[wid] = total / max(w.concurrency, 1)
         makespan = max(loads.values()) if loads else 0.0
         idle = sum(makespan - v for v in loads.values())
-        return makespan, idle, rows
+        return makespan, idle, rows, loads
 
     def _record_telemetry(self, t: int, assignment: Assignment, workers
                           ) -> tuple[float, float, list]:
@@ -399,18 +528,19 @@ class FederatedEngine:
                                                   concurrency=w.concurrency)
             return float(c.n_batches) / max(w.speed, 1e-9)
 
-        makespan, idle, rows = self._accumulate_loads(assignment, workers,
-                                                      draw)
+        makespan, idle, rows, _ = self._accumulate_loads(assignment, workers,
+                                                         draw)
         if isinstance(self.placement, LearningBasedPlacement):
             for tname, x, t_c in rows:
                 self.placement.observe_type(t, tname, x, t_c)
         return makespan, idle, rows
 
     def _predict_round(self, t: int, assignment: Assignment, workers
-                       ) -> tuple[float, float, list]:
+                       ) -> tuple[float, float, list, dict]:
         """Measured mode's prepare-time half: PREDICT per-client times (no
         synthetic draws, no ``observe``) and return the attribution shares
-        the consumer will spread the measured execution time over.
+        the consumer will spread the measured execution time over, plus the
+        per-wid predicted loads (the mesh path's drift reference).
 
         Falls back to batch-count/speed proxies until the per-type model is
         ready — exactly the warm-up the paper's RR rounds provide.
@@ -467,20 +597,86 @@ class FederatedEngine:
         place = (ctl.fallback_placement
                  if (fallback and ctl is not None) else self.placement)
         assignment = place.assign(clients, workers)
+        mesh_map = None
+        n_swaps = 0
+        if self._mesh_shards:
+            mesh_map = WorkerShardMap.build(workers, self._mesh_shards,
+                                            devices=self._shard_devices)
+            if self.cfg.cache_affinity and self._device_cache is not None:
+                # Load-neutral swap pass: move cached clients toward the
+                # shard already holding their rows (equal batch count +
+                # equal worker type, so every placement metric is
+                # preserved; only the cache hit pattern improves).  A
+                # shard that lost its last worker to churn is excluded —
+                # its stranded entries must not steer swaps toward a
+                # shard nothing can execute on.
+                live_shards = set(mesh_map.shard_of_wid.values())
+
+                def cached_shard(cid):
+                    home = self._device_cache.shard_for_client(cid)
+                    return home if home in live_shards else None
+
+                assignment, n_swaps = apply_cache_affinity(
+                    assignment, workers, mesh_map.shard_of_wid,
+                    cached_shard)
         shares = None
+        loads: dict = {}
         if self.cfg.telemetry_mode == "measured":
-            makespan, idle, shares = self._predict_round(t, assignment,
-                                                         workers)
+            makespan, idle, shares, loads = self._predict_round(
+                t, assignment, workers)
+            if mesh_map is not None:
+                # Per-worker programs sync individually: worker times are
+                # measured exactly, the round-level predicted-share
+                # attribution path is never used (test-enforced).
+                shares = None
         else:
             makespan, idle, rows = self._record_telemetry(t, assignment,
                                                           workers)
             if ctl is not None:
                 ctl.round_prepared(t, makespan=makespan,
                                    n_clients=len(clients), rows=rows)
+        # Snapshot the synthetic-telemetry RNG AFTER this round's draws
+        # (mirrors the sampler snapshot): the checkpoint for round_idx = t+1
+        # must resume the stream exactly where round t left it, regardless
+        # of how far ahead the depth-pipelined producer has drawn.
+        telemetry_st = (self.telemetry.state_dict()
+                        if hasattr(self.telemetry, "state_dict") else None)
         plan = plan_round(assignment, workers,
                           lanes_per_worker=self.cfg.lanes_per_worker,
                           steps_cap=self.cfg.steps_cap, min_steps=1)
         cache_plan = None
+        worker_programs = None
+        combine_masks = None
+        if mesh_map is not None:
+            # Mesh path: one device program per worker.  Masks and (without
+            # the cache) content are packed ONCE at full [W, P, S] size and
+            # sliced per worker for the per-shard device_puts; the full
+            # masks also ship once for the combine program's metrics.
+            S = self._s_align(plan.s_real)
+            if self._device_cache is not None:
+                arrays = build_round_masks(plan, S, buffers=self._pack_buffers)
+            else:
+                arrays = build_round_arrays(
+                    self.dataset, plan=plan,
+                    batch_size=self.cfg.batch_size, seq_len=self.cfg.seq_len,
+                    s_align=lambda s: S, buffers=self._pack_buffers)
+            worker_programs = self._pack_worker_programs(
+                t, plan, S, arrays, assignment, workers, mesh_map, loads)
+            pack_s = time.perf_counter() - tp0
+            combine_masks = (jax.device_put(arrays.step_mask),
+                             jax.device_put(arrays.boundary),
+                             jax.device_put(arrays.weight))
+            return _PreparedRound(t=t, clients=clients, workers=workers,
+                                  assignment=assignment, arrays=arrays,
+                                  device=None, pack_s=pack_s,
+                                  makespan=makespan, idle_time=idle,
+                                  n_steps_real=plan.n_steps_total,
+                                  shares=shares, stall_s=stall_s,
+                                  fallback=fallback, sampler_st=sampler_st,
+                                  telemetry_st=telemetry_st,
+                                  worker_programs=worker_programs,
+                                  combine_masks=combine_masks,
+                                  affinity_swaps=n_swaps)
         if self._device_cache is not None:
             # Cache path: no full-size host batch buffer exists at all —
             # masks are built host-side as usual, but content travels as a
@@ -513,10 +709,125 @@ class FederatedEngine:
                               cache_plan=cache_plan,
                               n_steps_real=plan.n_steps_total,
                               shares=shares, stall_s=stall_s,
-                              fallback=fallback, sampler_st=sampler_st)
+                              fallback=fallback, sampler_st=sampler_st,
+                              telemetry_st=telemetry_st)
+
+    def _pack_worker_programs(self, t, plan, S, arrays, assignment, workers,
+                              mesh_map, loads):
+        """Producer half of the mesh path: one (device-arrays, cache-plan)
+        bundle per worker, H2D'd to that worker's shard device.
+
+        Every worker shares the round's bucketed S, so all per-worker
+        programs compile to ONE executable.  With the device cache on, each
+        worker's content travels as its own compact miss array planned
+        against its shard's pool; without it, the full packed arrays are
+        sliced per worker (numpy views — no copies before the transfer)."""
+        order = sorted(workers, key=lambda w: w.wid)
+        subplans = (split_plan_by_worker(plan)
+                    if self._device_cache is not None else None)
+        slot_counts: dict[int, int] = {}
+        programs = []
+        for wi, w in enumerate(order):
+            shard = mesh_map.shard_of(w.wid)
+            dev = mesh_map.device_for(w.wid)
+            slot = slot_counts.get(shard, 0)
+            slot_counts[shard] = slot + 1
+            sl = slice(wi, wi + 1)
+            mask_d = jax.device_put(arrays.step_mask[sl], dev)
+            bnd_d = jax.device_put(arrays.boundary[sl], dev)
+            wt_d = jax.device_put(arrays.weight[sl], dev)
+            if self._device_cache is not None:
+                cplan = self._device_cache.plan(subplans[wi], S, t,
+                                                shard=shard, worker_slot=slot)
+                miss = gather_content_rows(
+                    self.dataset, subplans[wi], cplan.content_mask,
+                    cplan.n_miss_rows, batch_size=self.cfg.batch_size,
+                    seq_len=self.cfg.seq_len, buffers=self._pack_buffers)
+                batches_d = jax.device_put(miss, dev)
+            else:
+                cplan = None
+                batches_d = jax.device_put(
+                    {k: v[sl] for k, v in arrays.batches.items()}, dev)
+            xs = [c.n_batches
+                  for c in assignment.per_worker.get(w.wid, [])]
+            programs.append((w.wid, w.type_name, shard,
+                             (batches_d, mask_d, bnd_d, wt_d), cplan,
+                             xs, float(loads.get(w.wid, 0.0))))
+        return programs
+
+    def _execute_mesh(self, prep: _PreparedRound):
+        """Mesh consumer half: dispatch every worker's program (async),
+        sync each INDIVIDUALLY — the per-worker wall times MeasuredTelemetry
+        needs — then reduce the concatenated partials in one combine
+        program (bit-identical to the fused step's internal tail)."""
+        dispatched = []
+        shard_slots: dict[int, int] = {}
+        for wid, tname, shard, dev_arrays, cplan, xs, pred in \
+                prep.worker_programs:
+            batches, mask, bnd, wt = dev_arrays
+            if self._device_cache is not None and cplan is not None:
+                batches = self._device_cache.apply(batches, cplan)
+                shard_slots[shard] = max(shard_slots.get(shard, 0),
+                                         cplan.worker_slot + 1)
+            out = self._worker_step(self.params, batches, mask, bnd, wt)
+            dispatched.append((wid, tname, shard, xs, pred, out))
+        if self._device_cache is not None:
+            # Elastic churn can shrink (or empty) a shard's worker set;
+            # retire departed slots' round bases or their full-size device
+            # arrays stay resident for the rest of the run.
+            for s in range(self._device_cache.n_shards):
+                self._device_cache.retire_slots(s, shard_slots.get(s, 0))
+        # Per-worker device sync.  Each SHARD's programs serialize on its
+        # device group, so a worker's time is the delta from its
+        # shard-mate's completion — but different shards run concurrently
+        # on a real mesh, so each shard's chain is synced on its OWN
+        # thread: blocking on a slow shard from one thread would otherwise
+        # charge its wall time to every not-yet-observed worker elsewhere
+        # (inflating healthy workers' rows and tripping spurious drift).
+        # On a single shared device all programs serialize anyway and the
+        # per-shard deltas approximate the target topology.
+        t0 = prep.exec_t0
+        by_shard: dict[int, list] = {}
+        for i, (_, _, shard, _, _, out) in enumerate(dispatched):
+            by_shard.setdefault(shard, []).append((i, out[2]))
+        meas = [0.0] * len(dispatched)
+
+        def sync_shard(chain):
+            last = t0
+            for i, arr in chain:
+                jax.block_until_ready(arr)
+                now = time.perf_counter()
+                meas[i] = max(now - last, 0.0)
+                last = now
+
+        if len(by_shard) > 1:
+            list(self._sync_pool.map(sync_shard, by_shard.values()))
+        else:
+            for chain in by_shard.values():
+                sync_shard(chain)
+        prep.worker_times = [
+            (wid, tname, xs, pred, meas[i])
+            for i, (wid, tname, _, xs, pred, _) in enumerate(dispatched)]
+        # Combine: concatenate per-worker partials along W (exact — no
+        # arithmetic) and run the reduction tail as one program.  (On a
+        # real multi-device mesh the concat implies the shard→combine
+        # gather; the runtime inserts those transfers.)
+        theta_wp = jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0),
+            *[d[5][0] for d in dispatched])
+        n_wp = jnp.concatenate([d[5][1] for d in dispatched], axis=0)
+        lane_losses = jnp.concatenate([d[5][2] for d in dispatched], axis=0)
+        step_mask, boundary, weight = prep.combine_masks
+        fn, _ = self._combine_step.lookup(tuple(step_mask.shape))
+        new_params, metrics = fn(self.params, theta_wp, n_wp, lane_losses,
+                                 step_mask, boundary, weight)
+        self.params = new_params
+        return metrics
 
     def _execute(self, prep: _PreparedRound):
         """Dispatch the compiled round step (async); returns metrics."""
+        if prep.worker_programs is not None:
+            return self._execute_mesh(prep)
         batches, step_mask, boundary, weight = prep.device
         if self._device_cache is not None and prep.cache_plan is not None:
             # batches arrived as compact miss rows: one fused device pass
@@ -542,7 +853,8 @@ class FederatedEngine:
         prep.exec_s = time.perf_counter() - prep.exec_t0
         if self.control is not None:
             self.control.round_executed(prep.t, prep.exec_s, prep.shares,
-                                        prep.n_steps_real)
+                                        prep.n_steps_real,
+                                        worker_times=prep.worker_times)
 
     def _finish(self, prep: _PreparedRound, metrics, t0: float) -> RoundResult:
         """Consumer tail: result bookkeeping and periodic checkpoint.  (The
@@ -551,6 +863,16 @@ class FederatedEngine:
         loss = float(metrics.loss)             # device sync point
         stats = padding_stats(prep.arrays)
         cp = prep.cache_plan
+        hit_rate = cp.hit_rate if cp is not None else 0.0
+        bytes_saved = cp.bytes_saved if cp is not None else 0
+        if cp is None and prep.worker_programs is not None:
+            # Mesh path: one cache plan per worker — aggregate them.
+            plans = [p[4] for p in prep.worker_programs if p[4] is not None]
+            if plans:
+                hit = sum(c.hit_steps for c in plans)
+                total = hit + sum(c.miss_steps for c in plans)
+                hit_rate = hit / total if total else 0.0
+                bytes_saved = sum(c.bytes_saved for c in plans)
         result = RoundResult(
             round_idx=t, loss=loss, n_clients=len(prep.clients),
             makespan=prep.makespan, idle_time=prep.idle_time,
@@ -560,14 +882,16 @@ class FederatedEngine:
             pack_time=prep.pack_s,
             overlap_fraction=(prep.overlap_s / prep.pack_s
                               if prep.pack_s > 0 else 0.0),
-            recompiles=self._step_cache.compiles,
-            cache_hit_rate=cp.hit_rate if cp is not None else 0.0,
-            cache_bytes_saved=cp.bytes_saved if cp is not None else 0,
+            recompiles=self._compiles_total,
+            cache_hit_rate=hit_rate,
+            cache_bytes_saved=bytes_saved,
             exec_time=prep.exec_s, barrier_stall_s=prep.stall_s,
-            drift_fallback=prep.fallback)
+            drift_fallback=prep.fallback,
+            affinity_swaps=prep.affinity_swaps)
         self.history.append(result)
         self.round_idx = t + 1
         self._sampler_ckpt_state = prep.sampler_st
+        self._telemetry_ckpt_state = prep.telemetry_st
 
         if self.ckpt is not None and (t + 1) % self.cfg.rounds_per_checkpoint == 0:
             self.save_checkpoint()
@@ -748,6 +1072,14 @@ class FederatedEngine:
             extra["sampler"] = self._sampler_ckpt_state
         elif (st := sampler_state(self.sampler)) is not None:
             extra["sampler"] = st              # pre-first-round checkpoint
+        if self._telemetry_ckpt_state is not None:
+            # Synthetic-telemetry RNG, snapshotted at prepare time like the
+            # sampler's: a resumed synthetic run re-draws the exact times
+            # the uninterrupted run would have (ROADMAP follow-on (c)).
+            extra["telemetry_rng"] = self._telemetry_ckpt_state
+        elif self.telemetry is not None and hasattr(self.telemetry,
+                                                    "state_dict"):
+            extra["telemetry_rng"] = self.telemetry.state_dict()
         if isinstance(self.placement, LearningBasedPlacement):
             # Only rows of rounds already BOOKED: with pipeline_depth >= 1
             # the producer may have recorded telemetry for in-flight rounds
@@ -786,6 +1118,14 @@ class FederatedEngine:
                 print("warning: checkpoint sampler state unusable "
                       f"({e!r}); resuming with the configured sampler — "
                       "the workload stream will NOT match the original run")
+        if (extra.get("telemetry_rng") and self.telemetry is not None
+                and hasattr(self.telemetry, "load_state_dict")):
+            try:
+                self.telemetry.load_state_dict(extra["telemetry_rng"])
+            except (KeyError, ValueError, TypeError) as e:
+                print("warning: checkpoint telemetry RNG state unusable "
+                      f"({e!r}); resuming with a fresh stream — synthetic "
+                      "times will NOT match the uninterrupted run")
         if isinstance(self.placement, LearningBasedPlacement) and "telemetry" in extra:
             for tname, rows in extra["telemetry"].items():
                 m = self.placement._model(tname)

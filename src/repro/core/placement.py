@@ -38,6 +38,7 @@ __all__ = [
     "BatchesBasedPlacement",
     "LearningBasedPlacement",
     "make_placement",
+    "apply_cache_affinity",
 ]
 
 
@@ -238,6 +239,69 @@ class LearningBasedPlacement(Placement):
 
         per, loads = _lpt(clients, workers, load_fn, speed_key)
         return Assignment(per_worker=per, predicted_load=loads)
+
+
+def apply_cache_affinity(assignment: Assignment, workers, shard_of_wid,
+                         cached_shard_of) -> tuple[Assignment, int]:
+    """Cache-aware post-pass: swap clients so device-cached ones land on the
+    mesh shard that already holds their rows.
+
+    Strictly **load-neutral**: a swap exchanges two clients with EQUAL batch
+    counts between workers of EQUAL type, so every quantity a placement
+    strategy optimizes — per-worker batch totals (BB), per-worker predicted
+    times (LB: g(x) depends only on x and the worker's type), makespan,
+    idle time — is numerically unchanged; only the cache hit pattern
+    improves.  Deterministic: workers and clients are walked in order, the
+    first eligible partner wins.
+
+    ``shard_of_wid``: wid -> mesh shard; ``cached_shard_of``: cid -> shard
+    currently holding the client's rows (None = not cached, e.g.
+    :meth:`repro.data.device_cache.DeviceBatchCache.shard_for_client`).
+    Returns ``(assignment, n_swaps)`` — a new Assignment when swaps
+    happened (``predicted_load`` is carried over; it is invariant).
+    """
+    by_wid = {w.wid: w for w in workers}
+    per = {wid: list(cs) for wid, cs in assignment.per_worker.items()}
+    # (type, shard, x) -> [(wid, position)] of NON-home clients: candidates
+    # that may be displaced without losing a hit (their rows live elsewhere
+    # or nowhere).
+    candidates: dict[tuple, list] = {}
+    misplaced = []  # (wid, position, home_shard)
+    for wid in sorted(per):
+        w = by_wid[wid]
+        shard = shard_of_wid.get(wid)
+        if shard is None:
+            continue
+        for pos, c in enumerate(per[wid]):
+            home = cached_shard_of(c.cid)
+            if home is None or home != shard:
+                candidates.setdefault(
+                    (w.type_name, shard, c.n_batches), []).append((wid, pos))
+            if home is not None and home != shard:
+                misplaced.append((wid, pos, home))
+    swapped: set = set()
+    n_swaps = 0
+    for wid, pos, home in misplaced:
+        if (wid, pos) in swapped:
+            continue
+        w = by_wid[wid]
+        key = (w.type_name, home, per[wid][pos].n_batches)
+        partner = None
+        for cand in candidates.get(key, []):
+            if cand not in swapped and cand != (wid, pos):
+                partner = cand
+                break
+        if partner is None:
+            continue
+        pw, pp = partner
+        per[wid][pos], per[pw][pp] = per[pw][pp], per[wid][pos]
+        swapped.add((wid, pos))
+        swapped.add(partner)
+        n_swaps += 1
+    if not n_swaps:
+        return assignment, 0
+    return Assignment(per_worker=per,
+                      predicted_load=dict(assignment.predicted_load)), n_swaps
 
 
 def make_placement(name: str, **kw) -> Placement:

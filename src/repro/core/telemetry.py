@@ -98,12 +98,27 @@ PROFILES = {p.name: p for p in (A40, RTX2080TI, TPU_GROUP)}
 
 
 class SyntheticTelemetry:
-    """Ground-truth sampler of client training times (deterministic by seed)."""
+    """Ground-truth sampler of client training times (deterministic by seed).
+
+    Checkpointable: ``state_dict``/``load_state_dict`` round-trip the RNG
+    stream position (JSON-safe), so a resumed synthetic run re-draws
+    exactly the times the uninterrupted run would have.  The engine
+    snapshots the state at prepare time per round — like the sampler RNG —
+    so deep-pipelined read-ahead cannot corrupt the restore point.
+    """
 
     def __init__(self, profiles: dict[str, GPUProfile] | None = None, *,
                  seed: int = 1337):
         self.profiles = profiles or PROFILES
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
+
+    def state_dict(self) -> dict:
+        return {"seed": int(self.seed),
+                "rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
 
     def sample_time(self, worker_type: str, x: int, *, concurrency: int = 1) -> float:
         p = self.profiles[worker_type]

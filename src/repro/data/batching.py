@@ -37,7 +37,8 @@ import numpy as np
 
 __all__ = ["build_round_arrays", "build_round_arrays_loop", "RoundArrays",
            "RoundPlan", "PackBuffers", "plan_round", "padding_stats",
-           "lane_split", "build_round_masks", "gather_content_rows"]
+           "lane_split", "build_round_masks", "gather_content_rows",
+           "split_plan_by_worker"]
 
 
 @dataclass
@@ -152,6 +153,34 @@ def plan_round(assignment, workers, *, lanes_per_worker: int = 1,
         cids=np.repeat(c_cid, c_nb), batch_idx=within,
         b_w=c_w, b_p=c_p, b_s=c_start + c_nb - 1, b_weight=c_weight,
         b_cid=c_cid, b_nb=c_nb)
+
+
+def split_plan_by_worker(plan: RoundPlan) -> list[RoundPlan]:
+    """Partition a round's plan into one single-worker plan per worker row.
+
+    The mesh execution path dispatches one device program per FL worker;
+    each sub-plan describes that worker's ``[1, P, S, ...]`` block — same
+    lane/stream coordinates, worker row collapsed to 0.  Steps and
+    boundaries keep the parent plan's relative order (the parent is
+    worker-major), so per-worker cache planning walks clients in the same
+    order the fused plan would.  ``s_real`` stays the ROUND's longest lane:
+    every worker program shares the round's bucketed S, which is what lets
+    one compiled executable serve all workers.
+    """
+    out = []
+    for wi in range(plan.W):
+        sel = plan.w_idx == wi
+        bsel = plan.b_w == wi
+        out.append(RoundPlan(
+            W=1, P=plan.P, s_real=plan.s_real,
+            w_idx=np.zeros(int(sel.sum()), dtype=np.int64),
+            p_idx=plan.p_idx[sel], s_idx=plan.s_idx[sel],
+            cids=plan.cids[sel], batch_idx=plan.batch_idx[sel],
+            b_w=np.zeros(int(bsel.sum()), dtype=np.int64),
+            b_p=plan.b_p[bsel], b_s=plan.b_s[bsel],
+            b_weight=plan.b_weight[bsel], b_cid=plan.b_cid[bsel],
+            b_nb=plan.b_nb[bsel]))
+    return out
 
 
 class PackBuffers:

@@ -29,13 +29,27 @@ thread.  The assembly program is jitted through the engine's counted
 :class:`~repro.fl.round.StepCompileCache` (explicit ``donate_argnums``),
 with index lengths padded to powers of two using out-of-bounds sentinels
 (``mode="drop"``) so distinct compiled programs stay O(log max_steps).
+
+Sharded meshes (``n_shards > 1``, the engine's ``mesh_workers`` path): the
+cache splits into **per-shard pools** — each mesh shard owns an equal slice
+of the row budget, its own LRU, its own device pool arrays (resident on
+that shard's device), and its own round bases.  A client's rows live in
+the pool of the shard its worker mapped to; hit/miss/bytes accounting is
+kept per shard and sums to the global stats, and eviction in one pool
+never touches another (test-enforced).  Round bases are additionally keyed
+per worker *slot* within the shard, so two workers of one shard never
+donate each other's live round base inside a round.  ``shard_for_client``
+exposes where a client's rows currently live — the input to the engine's
+cache-aware placement (prefer the worker whose shard already holds the
+rows).
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -94,6 +108,41 @@ class _Entry:
     last_round: int
 
 
+def _zero_totals() -> dict:
+    return {
+        "hit_steps": 0,
+        "miss_steps": 0,
+        "hit_clients": 0,
+        "miss_clients": 0,
+        "insertions": 0,
+        "evictions": 0,
+        "bytes_saved": 0,
+        "rounds": 0,
+    }
+
+
+@dataclass
+class _Shard:
+    """One mesh shard's slice of the cache: its own LRU, free list, device
+    pool arrays, round bases, and accounting."""
+
+    capacity: int
+    device: object = None  # jax.Device the pool/bases live on (None = default)
+    entries: OrderedDict = field(default_factory=OrderedDict)  # cid -> _Entry
+    free: list = field(default_factory=list)
+    pools: dict | None = None
+    bases: OrderedDict = field(default_factory=OrderedDict)
+    totals: dict = field(default_factory=_zero_totals)
+    max_slot: int = 0  # highest worker slot seen (scales the base LRU cap)
+
+    def __post_init__(self):
+        self.free = list(range(self.capacity - 1, -1, -1))
+
+    def reset(self) -> None:
+        self.entries.clear()
+        self.free = list(range(self.capacity - 1, -1, -1))
+
+
 @dataclass
 class CachePlan:
     """One round's cache instructions, produced by :meth:`plan` on the pack
@@ -117,6 +166,8 @@ class CachePlan:
     inserted_clients: int = 0
     evicted_clients: int = 0
     bytes_saved: int = 0  # filled by apply() (needs leaf dtypes)
+    shard: int = 0  # mesh shard whose pool serves this plan
+    worker_slot: int = 0  # worker's slot within the shard (base isolation)
 
     @property
     def hit_rate(self) -> float:
@@ -137,8 +188,15 @@ class DeviceBatchCache:
     (with the round's ``nb`` validated on lookup — a mismatch is a miss);
     the batch leaf signature is global to the cache, and changing it under
     a live cache raises (one engine = one batch shape config).  Up to
-    ``_MAX_BASES`` persistent round bases are kept (S-bucketing keeps the
-    distinct shapes O(log S)); the least-recent is dropped beyond that.
+    ``_MAX_BASES`` persistent round bases are kept per worker slot
+    (S-bucketing keeps the distinct shapes O(log S)); the least-recent is
+    dropped beyond that.
+
+    ``n_shards > 1`` splits the row budget into that many independent
+    per-shard pools (mesh execution): every shard gets
+    ``capacity_rows // n_shards`` rows, its own LRU and device arrays
+    (placed on ``devices[shard]`` when given), and its own accounting —
+    ``stats()['per_shard']`` sums to the global counters.
     """
 
     def __init__(
@@ -148,6 +206,8 @@ class DeviceBatchCache:
         capacity_bytes: int = 0,
         row_bytes: int = 0,
         compile_cache_size: int = 32,
+        n_shards: int = 1,
+        devices=None,
     ):
         # Deferred import: repro.fl.round reaches back into repro.core (and
         # from there repro.data), so a module-level import would cycle when
@@ -159,6 +219,8 @@ class DeviceBatchCache:
                 f"need a positive capacity_rows or capacity_bytes, got "
                 f"rows={capacity_rows}, bytes={capacity_bytes}"
             )
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         if capacity_bytes > 0:
             # Byte budget -> rows via the per-row footprint (the caller
             # probes one packed batch; see FederatedEngine).  When both
@@ -170,12 +232,23 @@ class DeviceBatchCache:
                 )
             by_bytes = max(1, int(capacity_bytes) // int(row_bytes))
             capacity_rows = min(capacity_rows, by_bytes) if capacity_rows > 0 else by_bytes
-        self.capacity = int(capacity_rows)
+        per_shard = int(capacity_rows) // int(n_shards)
+        if per_shard < 1:
+            raise ValueError(
+                f"capacity of {capacity_rows} rows cannot be split over "
+                f"{n_shards} shards (needs >= 1 row per shard)"
+            )
+        self.n_shards = int(n_shards)
+        self.capacity_per_shard = per_shard
+        # Effective total: the per-shard floor division is the capacity the
+        # pools actually hold (a 10-row budget over 4 shards is 8 rows).
+        self.capacity = per_shard * self.n_shards
         self.capacity_bytes = int(capacity_bytes)
-        self._entries: OrderedDict[int, _Entry] = OrderedDict()
-        self._free: list[int] = list(range(self.capacity - 1, -1, -1))
-        self._pools: dict | None = None
-        self._bases: OrderedDict[tuple, dict] = OrderedDict()
+        devices = list(devices) if devices else []
+        self._shards = [
+            _Shard(capacity=per_shard, device=devices[s] if s < len(devices) else None)
+            for s in range(self.n_shards)
+        ]
         self._rowsig: tuple | None = None
         self._row_bytes = 0
         self._asm_cache = StepCompileCache(
@@ -183,28 +256,24 @@ class DeviceBatchCache:
             capacity=compile_cache_size,
             donate_argnums=(0, 2),  # base + pool update in place
         )
-        self.totals = {
-            "hit_steps": 0,
-            "miss_steps": 0,
-            "hit_clients": 0,
-            "miss_clients": 0,
-            "insertions": 0,
-            "evictions": 0,
-            "bytes_saved": 0,
-            "rounds": 0,
-        }
 
     # -- producer side (pack thread, strict round order) --------------------
-    def plan(self, rplan, S: int, round_idx: int) -> CachePlan:
+    def plan(
+        self, rplan, S: int, round_idx: int, *, shard: int = 0, worker_slot: int = 0
+    ) -> CachePlan:
         """Decide hits/insertions/evictions for one round's :class:`RoundPlan`.
 
         Mutates only host-side LRU metadata; call from the pack thread, in
         round order.  ``S`` is the post-bucket stream length the round's
         device arrays will use (it defines the flat slot indices).
+        ``shard`` picks the pool (the mesh path plans each worker's
+        sub-plan against its shard); ``worker_slot`` isolates the worker's
+        persistent round base from other workers of the same shard.
         """
+        sh = self._shards[shard]
+        sh.max_slot = max(sh.max_slot, int(worker_slot))
         C = rplan.n_clients
         P = rplan.P
-        M = rplan.W * P * S
         flat_steps = (rplan.w_idx * P + rplan.p_idx) * S + rplan.s_idx  # [N]
         starts = np.cumsum(rplan.b_nb) - rplan.b_nb  # [C] plan-step offsets
         hit_sel = np.zeros(C, dtype=bool)
@@ -212,11 +281,11 @@ class DeviceBatchCache:
         hit_dst: list[np.ndarray] = []
         for i in range(C):
             cid, nb = int(rplan.b_cid[i]), int(rplan.b_nb[i])
-            ent = self._entries.get(cid)
+            ent = sh.entries.get(cid)
             if ent is not None and ent.nb == nb:
                 hit_sel[i] = True
                 ent.last_round = round_idx
-                self._entries.move_to_end(cid)
+                sh.entries.move_to_end(cid)
                 hit_src.append(ent.rows)
                 hit_dst.append(flat_steps[starts[i] : starts[i] + nb])
 
@@ -234,20 +303,20 @@ class DeviceBatchCache:
         seen: set[int] = set()
         for i in np.flatnonzero(~hit_sel):
             cid, nb = int(rplan.b_cid[i]), int(rplan.b_nb[i])
-            if cid in seen or nb > self.capacity:
+            if cid in seen or nb > sh.capacity:
                 continue
             seen.add(cid)
-            stale = self._entries.pop(cid, None)
+            stale = sh.entries.pop(cid, None)
             if stale is not None:
                 # nb-mismatch re-insert: release the superseded entry's
                 # rows first or they would leak from the pool forever.
-                self._free.extend(stale.rows.tolist())
+                sh.free.extend(stale.rows.tolist())
                 evicted += 1
-            rows, ev = self._allocate(nb, round_idx)
+            rows, ev = self._allocate(sh, nb, round_idx)
             evicted += ev
             if rows is None:
                 continue  # every resident entry is already this round's
-            self._entries[cid] = _Entry(rows=rows, nb=nb, last_round=round_idx)
+            sh.entries[cid] = _Entry(rows=rows, nb=nb, last_round=round_idx)
             ins_src.append(comp_pos[starts[i] : starts[i] + nb])
             ins_dst.append(rows)
 
@@ -272,21 +341,25 @@ class DeviceBatchCache:
             miss_clients=int(C - hit_sel.sum()),
             inserted_clients=len(ins_dst),
             evicted_clients=evicted,
+            shard=int(shard),
+            worker_slot=int(worker_slot),
         )
 
-    def _allocate(self, nb: int, round_idx: int):
-        """Take ``nb`` free rows, evicting least-recent entries as needed.
-        Entries touched this round (hits and fresh inserts) are never
-        evicted; returns (None, evicted) when only those remain."""
+    @staticmethod
+    def _allocate(sh: _Shard, nb: int, round_idx: int):
+        """Take ``nb`` free rows from one shard, evicting its least-recent
+        entries as needed.  Entries touched this round (hits and fresh
+        inserts) are never evicted; returns (None, evicted) when only those
+        remain."""
         evicted = 0
-        while len(self._free) < nb:
-            cid, ent = next(iter(self._entries.items()))
+        while len(sh.free) < nb:
+            cid, ent = next(iter(sh.entries.items()))
             if ent.last_round == round_idx:
                 return None, evicted
-            del self._entries[cid]
-            self._free.extend(ent.rows.tolist())
+            del sh.entries[cid]
+            sh.free.extend(ent.rows.tolist())
             evicted += 1
-        rows = np.asarray([self._free.pop() for _ in range(nb)], dtype=np.int32)
+        rows = np.asarray([sh.free.pop() for _ in range(nb)], dtype=np.int32)
         return rows, evicted
 
     # -- consumer side (device thread) --------------------------------------
@@ -298,6 +371,7 @@ class DeviceBatchCache:
         slots from the pool.  Returns the ``[W, P, S, ...]`` batches dict
         for the training step (which must NOT donate it).
         """
+        sh = self._shards[cplan.shard]
         rowsig = _row_signature(miss_rows)
         if self._rowsig is not None and rowsig != self._rowsig:
             msg = (
@@ -305,48 +379,53 @@ class DeviceBatchCache:
                 f"cache holds {self._rowsig}, round needs {rowsig}"
             )
             raise RuntimeError(msg)
-        if self._pools is None:
-            pools = {}
-            nbytes = 0
-            for name, rows in miss_rows.items():
-                pools[name] = jnp.zeros((self.capacity,) + rows.shape[1:], rows.dtype)
-                nbytes += int(np.prod(rows.shape[1:])) * rows.dtype.itemsize
-            self._pools = pools
+        if self._rowsig is None:
             self._rowsig = rowsig
-            self._row_bytes = nbytes
-        shape = (cplan.W, cplan.P, cplan.S)
-        base_key = (shape, rowsig)
-        base = self._bases.pop(base_key, None)
-        if base is None:
-            base = {
-                name: jnp.zeros(shape + rows.shape[1:], rows.dtype)
+            self._row_bytes = sum(
+                int(np.prod(rows.shape[1:])) * rows.dtype.itemsize
+                for rows in miss_rows.values()
+            )
+        if sh.pools is None:
+            sh.pools = {
+                name: self._device_zeros((sh.capacity,) + rows.shape[1:], rows.dtype, sh)
                 for name, rows in miss_rows.items()
             }
-            while len(self._bases) >= _MAX_BASES:
-                self._bases.popitem(last=False)
+        shape = (cplan.W, cplan.P, cplan.S)
+        # Round bases are keyed per worker slot: two workers of one shard
+        # must never pop (and donate) each other's live base inside a round.
+        base_key = (shape, rowsig, cplan.worker_slot)
+        base = sh.bases.pop(base_key, None)
+        if base is None:
+            base = {
+                name: self._device_zeros(shape + rows.shape[1:], rows.dtype, sh)
+                for name, rows in miss_rows.items()
+            }
+            max_bases = _MAX_BASES * (sh.max_slot + 1)
+            while len(sh.bases) >= max_bases:
+                sh.bases.popitem(last=False)
         M = int(np.prod(shape))
         n_ins = _pow2(int(cplan.ins_src.shape[0])) if cplan.ins_src.size else 1
         n_hit = _pow2(int(cplan.hit_src.shape[0])) if cplan.hit_src.size else 1
         miss_dst = _pad_idx(cplan.miss_dst, cplan.n_miss_rows, fill=M)
         ins_src = _pad_idx(cplan.ins_src, n_ins, fill=0)
-        ins_dst = _pad_idx(cplan.ins_dst, n_ins, fill=self.capacity)
+        ins_dst = _pad_idx(cplan.ins_dst, n_ins, fill=sh.capacity)
         hit_src = _pad_idx(cplan.hit_src, n_hit, fill=0)
         hit_dst = _pad_idx(cplan.hit_dst, n_hit, fill=M)
-        key = (shape, cplan.n_miss_rows, n_ins, n_hit, self.capacity, rowsig)
+        key = (shape, cplan.n_miss_rows, n_ins, n_hit, sh.capacity, rowsig)
         fn, _ = self._asm_cache.lookup(key)
-        batches, self._pools = fn(
+        batches, sh.pools = fn(
             base,
             miss_rows,
-            self._pools,
+            sh.pools,
             miss_dst,
             ins_src,
             ins_dst,
             hit_src,
             hit_dst,
         )
-        self._bases[base_key] = batches
+        sh.bases[base_key] = batches
         cplan.bytes_saved = cplan.hit_steps * self._row_bytes
-        t = self.totals
+        t = sh.totals
         t["hit_steps"] += cplan.hit_steps
         t["miss_steps"] += cplan.miss_steps
         t["hit_clients"] += cplan.hit_clients
@@ -357,25 +436,75 @@ class DeviceBatchCache:
         t["rounds"] += 1
         return batches
 
+    @staticmethod
+    def _device_zeros(shape, dtype, sh: _Shard):
+        """Zeros resident on the shard's device (default device when None)."""
+        z = jnp.zeros(shape, dtype)
+        return jax.device_put(z, sh.device) if sh.device is not None else z
+
+    def retire_slots(self, shard: int, n_slots: int) -> None:
+        """Drop round bases of worker slots beyond ``n_slots`` on one shard.
+
+        Elastic churn can shrink a shard's worker set; the departed slots'
+        bases are full ``[1, P, S, ...]`` device arrays that the slot-keyed
+        LRU would otherwise retain for the rest of the run (the surviving
+        slots cycle through too few shape keys to ever push them out).
+        Consumer-thread call — bases are consumer-owned, like :meth:`apply`.
+        """
+        sh = self._shards[shard]
+        for key in [k for k in sh.bases if k[2] >= n_slots]:
+            del sh.bases[key]
+        sh.max_slot = min(sh.max_slot, max(n_slots - 1, 0))
+
     def invalidate(self) -> None:
-        """Drop every cached entry and reset the free list (pool/base
-        device arrays stay allocated; their content becomes unreferenced).
+        """Drop every cached entry and reset the free lists of every shard
+        (pool/base device arrays stay allocated; their content becomes
+        unreferenced).
 
         The engine calls this after a failed or aborted round prep — a
         prep that raised between :meth:`plan` and :meth:`apply` may have
         registered entries whose pool rows were never written, which a
         retry would serve as bogus hits — and on checkpoint restore."""
-        self._entries.clear()
-        self._free = list(range(self.capacity - 1, -1, -1))
+        for sh in self._shards:
+            sh.reset()
+
+    def shard_for_client(self, cid: int) -> int | None:
+        """Which shard's pool currently holds ``cid``'s rows (None = not
+        cached).  Producer-thread read — the input to cache-aware
+        placement.  A cid duplicated across shards (possible under
+        with-replacement sampling) reports the lowest shard."""
+        for s, sh in enumerate(self._shards):
+            if cid in sh.entries:
+                return s
+        return None
 
     # -- reporting ----------------------------------------------------------
     @property
+    def totals(self) -> dict:
+        """Global counters: the elementwise sum of the per-shard totals."""
+        out = _zero_totals()
+        for sh in self._shards:
+            for k, v in sh.totals.items():
+                out[k] += v
+        return out
+
+    @property
     def clients_cached(self) -> int:
-        return len(self._entries)
+        return sum(len(sh.entries) for sh in self._shards)
 
     @property
     def rows_used(self) -> int:
-        return self.capacity - len(self._free)
+        return sum(sh.capacity - len(sh.free) for sh in self._shards)
+
+    def _shard_stats(self, s: int) -> dict:
+        sh = self._shards[s]
+        out = dict(sh.totals)
+        steps = out["hit_steps"] + out["miss_steps"]
+        out["hit_rate"] = out["hit_steps"] / steps if steps else 0.0
+        out["clients_cached"] = len(sh.entries)
+        out["rows_used"] = sh.capacity - len(sh.free)
+        out["capacity_rows"] = sh.capacity
+        return out
 
     def stats(self) -> dict:
         out = dict(self.totals)
@@ -386,4 +515,7 @@ class DeviceBatchCache:
         out["capacity_rows"] = self.capacity
         out["capacity_bytes"] = self.capacity_bytes
         out["compiles"] = self._asm_cache.compiles
+        if self.n_shards > 1:
+            out["n_shards"] = self.n_shards
+            out["per_shard"] = [self._shard_stats(s) for s in range(self.n_shards)]
         return out

@@ -31,7 +31,50 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingRules", "make_sharding_rules", "spec_for_tree",
-           "named_shardings"]
+           "named_shardings", "WorkerShardMap"]
+
+
+@dataclass(frozen=True)
+class WorkerShardMap:
+    """Maps FL workers onto the mesh's worker shards (the mesh-path unit of
+    program dispatch, device placement, and device-cache pooling).
+
+    A *shard* is one slice of the mesh along its FL-worker axes — on a real
+    multi-device mesh each shard owns a device group (see
+    :func:`repro.launch.mesh.fl_shard_devices`); on a single-device host all
+    shards share the one device but still partition the cache pools and the
+    per-worker program dispatch.  Workers map to shards by ``wid % n_shards``
+    so a worker keeps its shard — and therefore its cached clients' pool —
+    across elastic fail/join churn of *other* workers.
+    """
+
+    n_shards: int
+    shard_of_wid: dict       # wid -> shard index
+    devices: tuple = ()      # shard -> jax.Device ( () = default device )
+
+    @classmethod
+    def build(cls, workers, n_shards: int, *, devices=None) -> "WorkerShardMap":
+        """``workers``: WorkerInfo list (any order); ``devices``: optional
+        shard->device list, cycled when shorter than ``n_shards``."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        mapping = {w.wid: w.wid % n_shards for w in workers}
+        dev = ()
+        if devices:
+            dev = tuple(devices[s % len(devices)] for s in range(n_shards))
+        return cls(n_shards=n_shards, shard_of_wid=mapping, devices=dev)
+
+    def shard_of(self, wid: int) -> int:
+        return self.shard_of_wid.get(wid, wid % self.n_shards)
+
+    def device_for(self, wid: int):
+        """The jax device worker ``wid``'s program runs on (None = default)."""
+        if not self.devices:
+            return None
+        return self.devices[self.shard_of(wid)]
+
+    def workers_in(self, shard: int) -> list:
+        return sorted(w for w, s in self.shard_of_wid.items() if s == shard)
 
 
 @dataclass

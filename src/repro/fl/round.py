@@ -22,6 +22,20 @@ of device arrays with leaves [W, P, S, ...]:
 
 Masked (padded) steps contribute zero gradient and zero weight; they are the
 idle time the placement model minimizes.
+
+Per-worker device programs (the mesh-sharded execution path,
+``EngineConfig.mesh_workers >= 2``): the same round decomposes into one
+:func:`make_worker_round_step` program per FL worker — the lane scans for
+that worker's ``[1, P, S, ...]`` block, returning its *unreduced* lane
+partials — plus one :func:`make_combine_step` program that concatenates
+every worker's partials along W and applies exactly the reduction tail of
+the fused step.  Because each lane's math is independent of the vmap batch
+it runs in and the combine reduces tensors of the same shapes the fused
+program reduces internally, the decomposition is bit-identical to the
+single-program path (test-enforced across shard counts); what it buys is a
+*per-worker* device sync — exact per-worker wall times for the control
+plane — and per-shard placement of each worker's program on a multi-device
+mesh.
 """
 
 from __future__ import annotations
@@ -37,8 +51,9 @@ from repro.core.aggregation import (partial_init, partial_update,
                                     tree_weighted_mean)
 from repro.optim.optimizers import apply_updates
 
-__all__ = ["make_round_step", "make_gather_round_step", "RoundMetrics",
-           "StepCompileCache", "round_shape_key"]
+__all__ = ["make_round_step", "make_worker_round_step", "make_combine_step",
+           "make_gather_round_step", "RoundMetrics", "StepCompileCache",
+           "round_shape_key"]
 
 
 class RoundMetrics(NamedTuple):
@@ -53,28 +68,19 @@ def _tree_select(flag, a, b):
     return jax.tree.map(lambda x, y: jnp.where(flag, x.astype(y.dtype), y), a, b)
 
 
-def make_round_step(loss_fn, optimizer, *, agg_impl: str = "xla",
-                    grad_clip: float | None = None,
-                    worker_spmd_axes=None):
-    """Build the jittable federated round function.
-
-    loss_fn(params, batch) -> scalar loss (batch is a dict of arrays for one
-    local step).  optimizer is a repro.optim.Optimizer.
-
-    ``worker_spmd_axes``: mesh axis name (or tuple) the FL-worker dim W is
-    sharded over.  Passed as ``spmd_axis_name`` to the worker vmap so every
-    per-worker intermediate — the evolving client parameters, optimizer
-    state, and partial aggregate — is *constrained* to shard its W dim over
-    those axes instead of relying on XLA propagation (which may otherwise
-    replicate W copies of the client model on every chip).
-    """
+def _make_lane_scan(loss_fn, optimizer, *, agg_impl: str = "xla",
+                    grad_clip: float | None = None):
+    """One lane's sequential client stream: scan over S local steps, folding
+    each client into the lane's running partial at its boundary.  Shared by
+    the fused round step and the per-worker mesh programs — the per-lane
+    math is what the decomposition invariance rests on."""
 
     def lane_scan(global_params, lane_batches, mask, boundary, weight):
         opt0 = optimizer.init(global_params)
         partial0 = partial_init(global_params)
 
         def step(carry, inp):
-            theta, opt_state, partial = carry
+            theta, opt_state, partial, loss_sum = carry
             batch, m, bnd, w = inp
             loss, grads = jax.value_and_grad(loss_fn)(theta, batch)
             if grad_clip is not None:
@@ -92,12 +98,38 @@ def make_round_step(loss_fn, optimizer, *, agg_impl: str = "xla",
             # Reset lane to the global model for the next client.
             theta = _tree_select(bnd > 0, global_params, theta)
             opt_state = _tree_select(bnd > 0, opt0, opt_state)
-            return (theta, opt_state, partial), loss * m
+            # The lane's loss total accumulates IN the scan carry: the
+            # association order is s = 0..S-1 by construction, in every
+            # program that embeds this scan — an XLA reduce over the
+            # per-step losses instead may tile (and round) differently in
+            # the fused round step vs the mesh path's combine program.
+            return (theta, opt_state, partial, loss_sum + loss * m), None
 
-        (_, _, partial), losses = jax.lax.scan(
-            step, (global_params, opt0, partial0),
+        (_, _, partial, loss_sum), _ = jax.lax.scan(
+            step, (global_params, opt0, partial0, jnp.zeros(())),
             (lane_batches, mask, boundary, weight))
-        return partial, losses
+        return partial, loss_sum
+
+    return lane_scan
+
+
+def make_round_step(loss_fn, optimizer, *, agg_impl: str = "xla",
+                    grad_clip: float | None = None,
+                    worker_spmd_axes=None):
+    """Build the jittable federated round function.
+
+    loss_fn(params, batch) -> scalar loss (batch is a dict of arrays for one
+    local step).  optimizer is a repro.optim.Optimizer.
+
+    ``worker_spmd_axes``: mesh axis name (or tuple) the FL-worker dim W is
+    sharded over.  Passed as ``spmd_axis_name`` to the worker vmap so every
+    per-worker intermediate — the evolving client parameters, optimizer
+    state, and partial aggregate — is *constrained* to shard its W dim over
+    those axes instead of relying on XLA propagation (which may otherwise
+    replicate W copies of the client model on every chip).
+    """
+    lane_scan = _make_lane_scan(loss_fn, optimizer, agg_impl=agg_impl,
+                                grad_clip=grad_clip)
 
     def round_step(global_params, batches, step_mask, boundary, weight):
         W, Pn = step_mask.shape[:2]
@@ -105,39 +137,116 @@ def make_round_step(loss_fn, optimizer, *, agg_impl: str = "xla",
             # single-worker fast path: no vmap wrappers, so manual-collective
             # layers (shard_map EP dispatch, §Perf B3) can live inside.
             squeezed = jax.tree.map(lambda x: x[0, 0], batches)
-            partial, losses1 = lane_scan(global_params, squeezed,
-                                         step_mask[0, 0], boundary[0, 0],
-                                         weight[0, 0])
+            partial, loss1 = lane_scan(global_params, squeezed,
+                                       step_mask[0, 0], boundary[0, 0],
+                                       weight[0, 0])
             partials = jax.tree.map(lambda x: x[None, None], partial)
-            losses = losses1[None, None]
+            lane_losses = loss1[None, None]
         else:
             # vmap lanes over P then workers over W; params broadcast
             # (replicated or FSDP-sharded — the sharding rules decide).
             per_lane = jax.vmap(lane_scan, in_axes=(None, 0, 0, 0, 0))
             per_worker = jax.vmap(per_lane, in_axes=(None, 0, 0, 0, 0),
                                   spmd_axis_name=worker_spmd_axes)
-            partials, losses = per_worker(global_params, batches, step_mask,
-                                          boundary, weight)
+            partials, lane_losses = per_worker(global_params, batches,
+                                               step_mask, boundary, weight)
         theta_wp, n_wp = partials                     # leaves [W,P,...], [W,P]
-        flat_w = n_wp.reshape(-1)
-        flat_theta = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
-                                  theta_wp)
-        total_w = flat_w.sum()
-        mean = tree_weighted_mean(flat_theta, flat_w)
-        # If the round somehow folded nothing, keep the old global model.
-        new_global = jax.tree.map(
-            lambda m_, g: jnp.where(total_w > 0, m_.astype(g.dtype), g),
-            mean, global_params)
-        n_steps = step_mask.sum()
-        metrics = RoundMetrics(
-            loss=losses.sum() / jnp.maximum(n_steps, 1.0),
-            steps=n_steps,
-            clients=boundary.sum(),
-            total_weight=total_w,
-        )
-        return new_global, metrics
+        return _reduce_partials(global_params, theta_wp, n_wp, lane_losses,
+                                step_mask, boundary, weight)
 
     return round_step
+
+
+def _ordered_sum(v):
+    """Strict left-to-right scalar sum via ``lax.scan``: the association
+    order is fixed by construction, so every program embedding it rounds
+    identically — a plain XLA full-reduce may pick different partial-sum
+    tilings in different fusion contexts (observed: ``losses.sum()`` over
+    ``[4, 1, 64]`` disagreed between the fused round step and the mesh
+    combine program in the last bit)."""
+    flat = v.reshape(-1)
+    return jax.lax.scan(lambda c, x: (c + x, None),
+                        jnp.zeros((), flat.dtype), flat)[0]
+
+
+def _reduce_partials(global_params, theta_wp, n_wp, lane_losses, step_mask,
+                     boundary, weight):
+    """The round's reduction tail: weighted mean of lane partials + metrics.
+
+    Shared verbatim by the fused round step (inlined after its vmaps) and
+    the standalone combine program of the mesh path.  ``lane_losses`` is
+    the ``[W, P]`` per-lane loss totals (scan-carried, order-fixed); the
+    cross-lane metric sum uses :func:`_ordered_sum` so the two program
+    contexts cannot re-associate it differently.  The remaining reduces
+    are order-insensitive: mask/boundary sums add exact 0/1 floats, and
+    client weights are integer-valued."""
+    flat_w = n_wp.reshape(-1)
+    flat_theta = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                              theta_wp)
+    total_w = flat_w.sum()
+    mean = tree_weighted_mean(flat_theta, flat_w)
+    # If the round somehow folded nothing, keep the old global model.
+    new_global = jax.tree.map(
+        lambda m_, g: jnp.where(total_w > 0, m_.astype(g.dtype), g),
+        mean, global_params)
+    n_steps = step_mask.sum()
+    metrics = RoundMetrics(
+        loss=_ordered_sum(lane_losses) / jnp.maximum(n_steps, 1.0),
+        steps=n_steps,
+        clients=boundary.sum(),
+        total_weight=total_w,
+    )
+    return new_global, metrics
+
+
+def make_worker_round_step(loss_fn, optimizer, *, agg_impl: str = "xla",
+                           grad_clip: float | None = None):
+    """One FL worker's half of the round: lane scans over that worker's
+    ``[W_k, P, S, ...]`` block, returning *unreduced* lane partials.
+
+    Returns ``worker_step(global_params, batches, step_mask, boundary,
+    weight) -> (theta_wp, n_wp, lane_losses)`` with leaves ``[W_k, P, ...]``,
+    ``[W_k, P]`` and ``[W_k, P]``.  The engine dispatches one such
+    program per worker (``W_k == 1``; the compiled executable is shared —
+    every worker has the same shapes) and syncs each individually: the sync
+    is what turns "one fused step, one round-level time" into exact
+    per-worker wall-clock measurements.  Reduction across workers happens
+    in :func:`make_combine_step` on the concatenated partials.
+    """
+    lane_scan = _make_lane_scan(loss_fn, optimizer, agg_impl=agg_impl,
+                                grad_clip=grad_clip)
+
+    def worker_step(global_params, batches, step_mask, boundary, weight):
+        # Always the vmap form, even at W_k == P == 1: the fused step only
+        # takes its no-vmap fast path when the WHOLE round is one worker x
+        # one lane, and per-lane results are vmap-batch-size independent —
+        # so matching the fused vmap path keeps the decomposition
+        # bit-identical for every multi-worker round.
+        per_lane = jax.vmap(lane_scan, in_axes=(None, 0, 0, 0, 0))
+        per_worker = jax.vmap(per_lane, in_axes=(None, 0, 0, 0, 0))
+        partials, lane_losses = per_worker(global_params, batches, step_mask,
+                                           boundary, weight)
+        theta_wp, n_wp = partials
+        return theta_wp, n_wp, lane_losses
+
+    return worker_step
+
+
+def make_combine_step():
+    """The round's server half for the mesh path: reduce the concatenated
+    per-worker lane partials into the new global model + metrics.
+
+    ``combine(global_params, theta_wp, n_wp, lane_losses, step_mask,
+    boundary, weight) -> (new_global, metrics)`` — exactly the fused step's
+    tail (:func:`_reduce_partials`) as its own donated program, dispatched
+    once per round after every worker program has been synced."""
+
+    def combine(global_params, theta_wp, n_wp, lane_losses, step_mask,
+                boundary, weight):
+        return _reduce_partials(global_params, theta_wp, n_wp, lane_losses,
+                                step_mask, boundary, weight)
+
+    return combine
 
 
 def make_gather_round_step(loss_fn, optimizer, *, grad_clip: float | None = None):

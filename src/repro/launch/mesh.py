@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_test_mesh", "axis_sizes",
-           "mesh_axis_types_kwargs"]
+           "mesh_axis_types_kwargs", "fl_shard_devices"]
 
 
 def mesh_axis_types_kwargs(axes) -> dict:
@@ -43,3 +43,34 @@ def make_test_mesh(shape=(1, 1), axes=("data", "model")):
 
 def axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def fl_shard_devices(n_shards: int, *, mesh=None, fl_axes=("pod", "data")):
+    """Lead devices of the mesh's FL-worker shards, cycled to ``n_shards``.
+
+    The engine's mesh execution path dispatches one program per FL worker
+    and places it on its shard's device group; this returns one
+    representative device per shard — with a mesh, the first device of each
+    slice along the FL-worker axes (the ``model`` axis carries TP *within*
+    a shard, so every shard's group is a contiguous block along it);
+    without one, ``jax.devices()`` round-robin.  On a single-device host
+    every shard resolves to that device — the decomposition then still buys
+    per-worker syncs and per-shard cache pools, just not parallel devices.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if mesh is None:
+        devs = list(jax.devices())
+    else:
+        names = list(mesh.axis_names)
+        keep = [i for i, a in enumerate(names) if a in fl_axes]
+        grid = mesh.devices
+        if keep:
+            # Collapse non-FL axes to their first coordinate: one lead
+            # device per FL-axis slice, in FL-axis-major order.
+            idx = tuple(slice(None) if i in keep else 0
+                        for i in range(grid.ndim))
+            devs = list(grid[idx].reshape(-1))
+        else:
+            devs = [grid.reshape(-1)[0]]
+    return [devs[s % len(devs)] for s in range(n_shards)]

@@ -36,7 +36,7 @@ from repro.models import init_params, make_loss_fn
 from repro.models.papertasks import TASK_MODELS, make_task_model
 from repro.optim import adam, sgd
 
-__all__ = ["build_engine", "main", "PRESETS"]
+__all__ = ["build_engine", "main", "flags_markdown", "PRESETS"]
 
 # LM presets for the CPU driver ("smoke" for tests/examples; "fl100m" is the
 # ~100M-param end-to-end config for real runs).
@@ -112,7 +112,8 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  sampler: str = "uniform", zipf_exponent: float = 1.2,
                  telemetry_mode: str = "synthetic",
                  barrier_policy: str = "reuse", drift_threshold: float = 0.0,
-                 adapt_interval: int = 0,
+                 adapt_interval: int = 0, adapt_granularity: str = "type",
+                 mesh_workers: int = 0, cache_affinity: bool = False,
                  grad_clip: float | None = None) -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
     key = jax.random.key(seed)
@@ -175,13 +176,16 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                             barrier_policy=barrier_policy,
                             drift_threshold=drift_threshold,
                             adapt_interval=adapt_interval,
+                            adapt_granularity=adapt_granularity,
+                            mesh_workers=mesh_workers,
+                            cache_affinity=cache_affinity,
                             **batch_kw),
         checkpoint_store=CheckpointStore(ckpt_dir) if ckpt_dir else None,
     )
     return engine
 
 
-def main() -> int:
+def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", choices=list(TASK_MODELS), default=None)
     ap.add_argument("--arch", default=None)
@@ -226,6 +230,22 @@ def main() -> int:
     ap.add_argument("--adapt-interval", type=int, default=0,
                     help="rounds per adaptive-concurrency hill-climb move "
                          "(0 = off)")
+    ap.add_argument("--adapt-granularity", default="type",
+                    choices=["type", "worker"],
+                    help="hill-climb one slot knob per worker TYPE, or one "
+                         "per individual worker (meaningful with "
+                         "--mesh-workers, whose per-worker measurements "
+                         "justify per-worker knobs)")
+    ap.add_argument("--mesh-workers", type=int, default=0,
+                    help="mesh shard count: 0/1 = one fused round program; "
+                         "K >= 2 = one device program per worker over K "
+                         "shards (exact per-worker measured times, "
+                         "per-shard device-cache pools)")
+    ap.add_argument("--cache-affinity", action="store_true",
+                    help="prefer placing a device-cached client on the "
+                         "mesh shard already holding its rows (load-"
+                         "neutral swaps; needs --mesh-workers >= 2 and a "
+                         "device cache)")
     ap.add_argument("--seed", type=int, default=1337)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -234,7 +254,39 @@ def main() -> int:
                     help="WID:ROUND — inject a worker failure")
     ap.add_argument("--join-worker", default=None, help="WID:ROUND")
     ap.add_argument("--metrics-out", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--print-flags-md", action="store_true",
+                    help="emit this flag reference as a markdown table and "
+                         "exit (the README section is generated from it, "
+                         "so the two cannot drift — CI checks)")
+    return ap
+
+
+def flags_markdown() -> str:
+    """The CLI flag reference as a markdown table, generated from the live
+    argparse parser — the single source the README section is built from."""
+    rows = ["| flag | default | description |", "| --- | --- | --- |"]
+    for a in _build_parser()._actions:
+        if not a.option_strings or a.dest == "help":
+            continue
+        flag = "`" + ", ".join(a.option_strings) + "`"
+        if a.choices:
+            flag += " " + "\\|".join(str(c) for c in a.choices)
+        if isinstance(a, argparse._StoreTrueAction):
+            default = "off"
+        elif a.default is None:
+            default = "—"
+        else:
+            default = f"`{a.default}`"
+        desc = " ".join((a.help or "").split())
+        rows.append(f"| {flag} | {default} | {desc} |")
+    return "\n".join(rows)
+
+
+def main() -> int:
+    args = _build_parser().parse_args()
+    if args.print_flags_md:
+        print(flags_markdown())
+        return 0
 
     engine = build_engine(
         task=args.task, arch=args.arch, preset=args.preset,
@@ -249,7 +301,10 @@ def main() -> int:
         zipf_exponent=args.zipf_exponent, telemetry_mode=args.telemetry,
         barrier_policy=args.barrier_policy,
         drift_threshold=args.drift_threshold,
-        adapt_interval=args.adapt_interval)
+        adapt_interval=args.adapt_interval,
+        adapt_granularity=args.adapt_granularity,
+        mesh_workers=args.mesh_workers,
+        cache_affinity=args.cache_affinity)
 
     if args.fail_worker:
         wid, rnd = (int(x) for x in args.fail_worker.split(":"))
@@ -279,6 +334,12 @@ def main() -> int:
             [r.cache_hit_rate for r in results])) if results else None
         summary["cache_bytes_saved"] = int(sum(
             r.cache_bytes_saved for r in results))
+    if args.mesh_workers >= 2:
+        summary["mesh_workers"] = args.mesh_workers
+        summary["affinity_swaps"] = int(sum(
+            r.affinity_swaps for r in results))
+        if engine.cache_stats.get("per_shard"):
+            summary["cache_per_shard"] = engine.cache_stats["per_shard"]
     if engine.control is not None:
         summary["control"] = engine.control_stats
         summary["mean_exec_s"] = float(np.mean(

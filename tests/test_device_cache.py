@@ -307,3 +307,106 @@ def test_engine_byte_capacity_equivalent_to_row_capacity():
     s1, s2 = by_rows.cache_stats, by_bytes.cache_stats
     for k in ("hit_steps", "miss_steps", "insertions", "evictions"):
         assert s1[k] == s2[k], k
+
+
+# -- per-shard pools (mesh execution) -----------------------------------------
+
+def _shard_round(ds, cids, cache, t, shard, *, slot=0, steps_cap=3):
+    """One single-worker round planned against one shard's pool."""
+    assignment, workers = _assignment(ds, cids, workers=1)
+    plan = plan_round(assignment, workers, steps_cap=steps_cap)
+    S = s_bucket(plan.s_real)
+    cplan = cache.plan(plan, S, t, shard=shard, worker_slot=slot)
+    rows = gather_content_rows(ds, plan, cplan.content_mask,
+                               cplan.n_miss_rows, batch_size=2)
+    ref = build_round_arrays(ds, plan=plan, batch_size=2, s_align=s_bucket)
+    miss = {k: jax.device_put(v) for k, v in rows.items()}
+    out = cache.apply(miss, cplan)
+    return out, cplan, ref
+
+
+def test_per_shard_accounting_sums_to_global():
+    """Hit/miss/bytes bookkeeping is kept per shard and the shard rows sum
+    exactly to the global counters; hits land in the serving shard only."""
+    ds = _ds()
+    cache = DeviceBatchCache(64, n_shards=2)
+    assert cache.capacity_per_shard == 32
+    _shard_round(ds, [1, 2], cache, 0, shard=0)
+    _shard_round(ds, [3, 4], cache, 0, shard=1)
+    out, cp, ref = _shard_round(ds, [1, 2], cache, 1, shard=0)  # full hit
+    assert cp.hit_clients == 2 and cp.shard == 0
+    _assert_matches_ref(out, ref)
+    st = cache.stats()
+    assert st["n_shards"] == 2
+    for key in ("hit_steps", "miss_steps", "hit_clients", "miss_clients",
+                "insertions", "evictions", "bytes_saved", "rounds",
+                "clients_cached", "rows_used"):
+        assert sum(s[key] for s in st["per_shard"]) == st[key], key
+    assert st["per_shard"][0]["hit_clients"] == 2
+    assert st["per_shard"][1]["hit_clients"] == 0
+    assert cache.shard_for_client(1) == 0
+    assert cache.shard_for_client(3) == 1
+    assert cache.shard_for_client(99) is None
+
+
+def test_eviction_in_one_shard_never_touches_another():
+    """Pressure on shard 0 evicts only shard-0 entries: shard 1's clients
+    stay resident and keep hitting."""
+    ds = _ds()
+    nb = {c: min(ds.n_batches(c), 3) for c in range(16)}
+    cap0 = nb[1] + nb[2]
+    cache = DeviceBatchCache(2 * cap0, n_shards=2)
+    _shard_round(ds, [1, 2], cache, 0, shard=0)     # fills shard 0 exactly
+    _shard_round(ds, [5, 6], cache, 0, shard=1)
+    resident_1 = set(cache._shards[1].entries)
+    # new clients into shard 0 force evictions THERE...
+    _, cp, _ = _shard_round(ds, [7, 8], cache, 1, shard=0)
+    assert cp.evicted_clients > 0 and cp.shard == 0
+    assert cache.stats()["per_shard"][0]["evictions"] > 0
+    # ...while shard 1 is untouched and still hits
+    assert set(cache._shards[1].entries) == resident_1
+    assert cache.stats()["per_shard"][1]["evictions"] == 0
+    _, cp1, _ = _shard_round(ds, [5, 6], cache, 2, shard=1)
+    assert cp1.hit_clients == 2
+
+
+def test_worker_slot_keys_isolate_round_bases():
+    """Two workers of one shard in the same round must not share (and
+    donate) one round base: distinct worker_slot keys get distinct bases."""
+    ds = _ds()
+    cache = DeviceBatchCache(64, n_shards=1)
+    out_a, _, ref_a = _shard_round(ds, [1, 2], cache, 0, shard=0, slot=0)
+    out_b, _, ref_b = _shard_round(ds, [3, 4], cache, 0, shard=0, slot=1)
+    # both bases remain readable after the round (no cross-donation)
+    _assert_matches_ref(out_a, ref_a)
+    _assert_matches_ref(out_b, ref_b)
+    assert len(cache._shards[0].bases) == 2
+
+
+def test_capacity_must_cover_every_shard():
+    import pytest
+
+    with pytest.raises(ValueError, match="split over"):
+        DeviceBatchCache(3, n_shards=4)
+    with pytest.raises(ValueError, match="n_shards"):
+        DeviceBatchCache(8, n_shards=0)
+
+
+def test_retire_slots_drops_departed_workers_bases():
+    """Churn shrinks a shard's worker set: the departed slot's full-size
+    round base is dropped (it would otherwise stay resident forever), the
+    surviving slot's base is untouched."""
+    ds = _ds()
+    cache = DeviceBatchCache(64, n_shards=1)
+    out_a, _, ref_a = _shard_round(ds, [1, 2], cache, 0, shard=0, slot=0)
+    _shard_round(ds, [3, 4], cache, 0, shard=0, slot=1)
+    assert len(cache._shards[0].bases) == 2
+    cache.retire_slots(0, 1)                 # slot 1's worker left
+    assert len(cache._shards[0].bases) == 1
+    assert all(k[2] == 0 for k in cache._shards[0].bases)
+    assert cache._shards[0].max_slot == 0
+    _assert_matches_ref(out_a, ref_a)        # survivor's base untouched
+    # entries (pool rows) survive — only the per-slot bases are retired
+    assert cache.clients_cached == 4
+    cache.retire_slots(0, 0)                 # shard orphaned entirely
+    assert len(cache._shards[0].bases) == 0

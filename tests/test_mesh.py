@@ -1,0 +1,189 @@
+"""Mesh execution: per-worker device programs over worker shards.
+
+The decomposition invariant (acceptance-gated): synthetic-mode losses are
+bit-identical across mesh shard counts 1/2/4 at pipeline depths 0/1/2 —
+shard count 1 IS the fused single-program path — even with the control
+plane live.  Measured mode on a mesh records exact per-worker wall times;
+the round-level predicted-share attribution path is never used.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                        UniformSampler, ZipfSampler, apply_cache_affinity,
+                        make_placement)
+from repro.core.placement import Assignment, ClientInfo, WorkerInfo
+from repro.data import make_federated_dataset
+from repro.distributed import WorkerPool
+from repro.distributed.sharding import WorkerShardMap
+from repro.fl.strategy import FedMedian
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+
+
+def _engine(mesh=0, depth=1, cache=0, placement="lb", telemetry="synthetic",
+            drift=0.0, adapt=0, sampler="uniform", affinity=False,
+            granularity="type", strategy=None, workers=4):
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
+                                batch_size=4, size_mu=2.5, size_sigma=0.8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=2)
+    samp = (ZipfSampler(64, 8, a=1.2) if sampler == "zipf"
+            else UniformSampler(64, 8))
+    return FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement(placement), sampler=samp,
+        pool=WorkerPool.homogeneous(workers, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(), strategy=strategy,
+        config=EngineConfig(steps_cap=4, batch_size=4, lanes_per_worker=2,
+                            pipeline_depth=depth, mesh_workers=mesh,
+                            device_cache_batches=cache,
+                            cache_affinity=affinity,
+                            telemetry_mode=telemetry,
+                            drift_threshold=drift, adapt_interval=adapt,
+                            adapt_granularity=granularity))
+
+
+# -- the decomposition invariant ---------------------------------------------
+
+def test_losses_bit_identical_across_shard_counts_and_depths():
+    """Shard counts 1/2/4 x depths 0/1/2, controller live (drift detection
+    + per-worker slot climbing): losses, makespans and S are bit-identical.
+    Shard count 1 is the fused single-program path, so this also proves
+    fused == per-worker-programs + combine."""
+    kw = dict(drift=0.4, adapt=2, granularity="worker")
+    base = _engine(mesh=0, depth=1, **kw).run(5)
+    for mesh, depth in [(2, 0), (2, 1), (2, 2), (4, 0), (4, 1), (4, 2)]:
+        res = _engine(mesh=mesh, depth=depth, **kw).run(5)
+        tag = f"mesh={mesh} depth={depth}"
+        assert [r.loss for r in res] == [r.loss for r in base], tag
+        assert [r.makespan for r in res] == [r.makespan for r in base], tag
+        assert [r.s_steps for r in res] == [r.s_steps for r in base], tag
+
+
+def test_mesh_cache_bit_identical_and_per_shard_accounting():
+    """Per-shard pools serve exact bytes: a Zipf (hot-client) run is
+    bit-identical fused vs 2-shard mesh, and the per-shard hit/miss/bytes
+    counters sum to the global stats."""
+    fused = _engine(mesh=0, depth=1, cache=64, sampler="zipf").run(6)
+    eng = _engine(mesh=2, depth=1, cache=64, sampler="zipf")
+    res = eng.run(6)
+    assert [r.loss for r in fused] == [r.loss for r in res]
+    st = eng.cache_stats
+    assert st["n_shards"] == 2 and len(st["per_shard"]) == 2
+    for key in ("hit_steps", "miss_steps", "hit_clients", "miss_clients",
+                "insertions", "evictions", "bytes_saved", "clients_cached",
+                "rows_used"):
+        assert sum(s[key] for s in st["per_shard"]) == st[key], key
+    # capacity split evenly; shards must both have seen traffic
+    assert all(s["capacity_rows"] == 32 for s in st["per_shard"])
+    assert all(s["miss_steps"] > 0 for s in st["per_shard"])
+    # ONE worker-step executable serves every worker: compiles are bounded
+    # by the distinct S buckets, not workers x rounds (4 x 6 dispatches).
+    ws = eng.compile_stats["worker_step"]
+    assert ws["compiles"] <= 4
+    assert ws["hits"] >= 6 * 4 - ws["compiles"]
+
+
+def test_mesh_measured_mode_exact_per_worker_times():
+    """Multi-shard measured runs never use predicted-share attribution:
+    every row comes from a per-worker device sync, every worker gets a
+    residual, and the refit barrier audit stays clean."""
+    eng = _engine(mesh=2, depth=1, telemetry="measured", drift=0.4)
+    eng.run(5)
+    st = eng.control.stats()
+    assert st["barrier"]["rows_attributed"] == 0
+    assert st["barrier"]["rows_exact"] > 0
+    assert st["audit_violations"] == 0
+    # every live worker accumulated a measured-vs-predicted residual
+    assert sorted(st["worker_residuals"]) == [0, 1, 2, 3]
+    assert all(r.exec_time > 0 for r in eng.history)
+
+
+def test_mesh_requires_associative_strategy():
+    with pytest.raises(ValueError, match="associative"):
+        _engine(mesh=2, strategy=FedMedian())
+
+
+def test_engine_config_rejects_bad_mesh_knobs():
+    with pytest.raises(ValueError, match="mesh_workers"):
+        EngineConfig(mesh_workers=-1)
+    with pytest.raises(ValueError, match="cache_affinity"):
+        EngineConfig(cache_affinity=True, device_cache_batches=8)
+    with pytest.raises(ValueError, match="device cache"):
+        EngineConfig(cache_affinity=True, mesh_workers=2)
+    with pytest.raises(ValueError, match="adapt_granularity"):
+        EngineConfig(adapt_granularity="lane")
+
+
+# -- worker shard map --------------------------------------------------------
+
+def test_worker_shard_map_stable_under_churn():
+    workers = [WorkerInfo(wid=w) for w in (0, 1, 2, 5, 8)]
+    m = WorkerShardMap.build(workers, 3)
+    assert m.shard_of(5) == 2 and m.shard_of(8) == 2 and m.shard_of(1) == 1
+    # a worker keeps its shard when OTHER workers fail/join
+    m2 = WorkerShardMap.build([w for w in workers if w.wid != 1], 3)
+    assert all(m2.shard_of(w.wid) == m.shard_of(w.wid)
+               for w in workers if w.wid != 1)
+    assert m.workers_in(2) == [2, 5, 8]
+    assert m.device_for(0) is None            # no devices bound
+    with pytest.raises(ValueError, match="n_shards"):
+        WorkerShardMap.build(workers, 0)
+
+
+# -- cache-aware placement ---------------------------------------------------
+
+def test_apply_cache_affinity_is_load_neutral():
+    """A swap exchanges equal-batch clients between equal-type workers: the
+    per-worker batch multiset (and thus every placement metric) is
+    unchanged, while the cached client lands on its home shard."""
+    cs = [ClientInfo(cid=i, n_batches=nb)
+          for i, nb in enumerate([4, 4, 6, 6])]
+    workers = [WorkerInfo(wid=0, type_name="a40"),
+               WorkerInfo(wid=1, type_name="a40")]
+    asg = Assignment(per_worker={0: [cs[0], cs[2]], 1: [cs[1], cs[3]]})
+    shard_of_wid = {0: 0, 1: 1}
+    # client 1 (x=4, on worker 1 / shard 1) is cached in shard 0
+    cached = {1: 0}.get
+    out, n = apply_cache_affinity(asg, workers, shard_of_wid, cached)
+    assert n == 1
+    assert [c.cid for c in out.per_worker[0]] == [1, 2]   # cid 1 went home
+    assert [c.cid for c in out.per_worker[1]] == [0, 3]
+    for wid in (0, 1):   # load-neutral: batch multisets unchanged
+        assert (sorted(c.n_batches for c in out.per_worker[wid])
+                == sorted(c.n_batches for c in asg.per_worker[wid]))
+    # no eligible partner (different type) -> no swap
+    workers2 = [WorkerInfo(wid=0, type_name="a40"),
+                WorkerInfo(wid=1, type_name="2080ti")]
+    _, n2 = apply_cache_affinity(asg, workers2, shard_of_wid, cached)
+    assert n2 == 0
+
+
+def test_cache_affinity_improves_hit_rate_on_skew():
+    off = _engine(mesh=2, depth=1, cache=64, sampler="zipf")
+    r_off = off.run(8)
+    on = _engine(mesh=2, depth=1, cache=64, sampler="zipf", affinity=True)
+    r_on = on.run(8)
+    assert sum(r.affinity_swaps for r in r_on) > 0
+    assert sum(r.affinity_swaps for r in r_off) == 0
+    assert (on.cache_stats["hit_steps"] >= off.cache_stats["hit_steps"])
+
+
+# -- per-worker slot climbing ------------------------------------------------
+
+def test_adapt_granularity_worker_moves_single_wid():
+    eng = _engine(mesh=2, depth=1, adapt=1, granularity="worker")
+    eng.run(6)
+    traj = eng.control.autoconc.trajectory
+    assert traj, "climber never moved"
+    # knobs are per-wid ("w<wid>"), round-robined across workers
+    moved_keys = {k for (_, k, _, _) in traj}
+    assert all(k.startswith("w") for k in moved_keys)
+    assert len(moved_keys) >= 2
+    # the last move landed on exactly that worker's pool entry
+    _, key, _, new = traj[-1]
+    assert eng.pool.workers[int(key[1:])].concurrency == new

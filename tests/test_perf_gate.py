@@ -17,6 +17,13 @@ def _record():
             "depth2": {"overlap_fraction": 0.87, "recompiles": 1},
         },
         "device_cache": {"on": {"hit_rate": 0.6}},
+        "mesh": {
+            "losses_identical": True,
+            "shards2": {"hit_rate": 0.5, "worker_step_compiles": 2,
+                        "per_shard_sums_to_global": True},
+            "shards4": {"hit_rate": 0.4, "worker_step_compiles": 2,
+                        "per_shard_sums_to_global": True},
+        },
     }
 
 
@@ -46,6 +53,16 @@ def test_each_regression_class_is_caught():
          lambda r: r["engine"]["depth1"].__setitem__("recompiles", 4)),
         ("cache never hits",
          lambda r: r["device_cache"]["on"].__setitem__("hit_rate", 0.0)),
+        ("mesh shard counts diverged",
+         lambda r: r["mesh"].__setitem__("losses_identical", False)),
+        ("per-shard accounting broke",
+         lambda r: r["mesh"]["shards2"].__setitem__(
+             "per_shard_sums_to_global", False)),
+        ("worker-step executable sharing broke",
+         lambda r: r["mesh"]["shards4"].__setitem__(
+             "worker_step_compiles", 40)),
+        ("mesh hit rate collapse",
+         lambda r: r["mesh"]["shards2"].__setitem__("hit_rate", 0.1)),
     ]
     for name, mutate in cases:
         fresh = copy.deepcopy(_record())

@@ -17,7 +17,8 @@ from repro.optim import sgd
 
 
 def _small_engine(tmp_path=None, placement="lb", strategy="fedavg",
-                  workers=2, rounds_per_ckpt=2, deadline_rho=0.0):
+                  workers=2, rounds_per_ckpt=2, deadline_rho=0.0,
+                  pool=None):
     ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
                                 batch_size=4, size_mu=2.5, size_sigma=0.8)
     params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
@@ -29,7 +30,8 @@ def _small_engine(tmp_path=None, placement="lb", strategy="fedavg",
         optimizer=sgd(0.1, momentum=0.9),
         placement=make_placement(placement),
         sampler=UniformSampler(64, 8),
-        pool=WorkerPool.homogeneous(workers, type_name="a40", concurrency=2),
+        pool=pool or WorkerPool.homogeneous(workers, type_name="a40",
+                                            concurrency=2),
         telemetry=SyntheticTelemetry(),
         strategy=FedAvg() if strategy == "fedavg" else FedMedian(),
         config=EngineConfig(steps_cap=4, batch_size=4,
@@ -74,6 +76,32 @@ def test_checkpoint_resume_is_exact(tmp_path):
     res = eng2.run(1)
     assert not eng2.placement.used_fallback
     assert np.isfinite(res[-1].loss)
+
+
+def test_resumed_synthetic_run_bit_identical(tmp_path):
+    """ROADMAP follow-on (c): the synthetic-telemetry RNG stream rides the
+    checkpoint (snapshotted at prepare time, like the sampler RNG), so a
+    restore-and-resume run re-draws exactly the times — and therefore the
+    LB placements and losses — of the uninterrupted run.  The pool is
+    heterogeneous so the placement (and thus the losses) actually depends
+    on the per-type fits the draws feed."""
+    def mixed_pool():
+        return WorkerPool.from_specs([("a40", 1.0, 2), ("2080ti", 0.42, 2)])
+
+    whole = _small_engine(tmp_path=tmp_path / "a", pool=mixed_pool())
+    ref = whole.run(6)
+
+    eng1 = _small_engine(tmp_path=tmp_path / "b", pool=mixed_pool())
+    eng1.run(4)                               # checkpoints at rounds 2, 4
+    eng2 = _small_engine(tmp_path=tmp_path / "b", pool=mixed_pool())
+    assert eng2.restore_latest()
+    assert eng2.round_idx == 4
+    resumed = eng2.run(2)                     # rounds 4 and 5
+    assert [r.loss for r in resumed] == [r.loss for r in ref[4:]]
+    assert [r.makespan for r in resumed] == [r.makespan for r in ref[4:]]
+    # the snapshot is prepare-time: depth-1 read-ahead must not leak draws
+    assert eng2.telemetry.rng.bit_generator.state != \
+        SyntheticTelemetry().rng.bit_generator.state
 
 
 def test_worker_failure_and_join_mid_training():

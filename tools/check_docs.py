@@ -1,0 +1,74 @@
+"""Docs consistency checks (run by the CI lint job and tier-1 tests).
+
+Two checks, both zero-dependency beyond the repo itself:
+
+1. **Markdown link check** — every relative link in the repo's markdown
+   files must resolve to an existing file (anchors are stripped; http(s)
+   and mailto links are not fetched).  Catches renamed/moved docs.
+2. **Flag-reference freshness** — the README section between
+   ``<!-- flags:begin -->`` / ``<!-- flags:end -->`` must equal the output
+   of ``python -m repro.launch.train --print-flags-md`` exactly.  The
+   table is generated, never hand-edited, so CLI and docs cannot drift.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MD_FILES = sorted(
+    list(REPO.glob("*.md")) + list((REPO / "docs").glob("*.md")))
+LINK_RX = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+BEGIN, END = "<!-- flags:begin -->", "<!-- flags:end -->"
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in MD_FILES:
+        text = md.read_text(encoding="utf-8")
+        for target in LINK_RX.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_flags_section() -> list[str]:
+    readme = (REPO / "README.md").read_text(encoding="utf-8")
+    if BEGIN not in readme or END not in readme:
+        return [f"README.md: missing {BEGIN} / {END} markers"]
+    current = readme.split(BEGIN, 1)[1].split(END, 1)[0].strip()
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.launch.train import flags_markdown
+    expected = flags_markdown().strip()
+    if current != expected:
+        return ["README.md flag reference is stale — regenerate with:\n"
+                "  PYTHONPATH=src python -m repro.launch.train "
+                "--print-flags-md\nand paste between the flags markers"]
+    return []
+
+
+def main() -> int:
+    errors = check_links() + check_flags_section()
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        print(f"docs OK ({len(MD_FILES)} markdown files, links + flag "
+              "reference fresh)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
