@@ -23,6 +23,12 @@ paper's idle-time argument applied to the simulator itself):
   losses asserted bit-identical across shard counts, per-shard cache-pool
   accounting (must sum to the global counters), and the worker-step
   compile count (all workers share ONE executable per S bucket).
+* **hierarchy**: the hierarchical-mesh refinements on a heterogeneous
+  (fast + slow) pool — ``bucket_mode="worker"`` per-worker S buckets
+  (padded-step counts must drop vs ``"round"``, losses bit-identical,
+  executables O(log S)) and ``combine_mode="tree"`` shard-local combine
+  trees (cross-shard transfer bytes must shrink, losses equal to the flat
+  combine within float tolerance).
 
 Emits machine-readable JSON (default ``BENCH_pipeline.json`` at the repo
 root, override with ``POLLEN_BENCH_OUT``) so future PRs get a perf
@@ -108,7 +114,8 @@ def _pack_comparison(*, cohort: int, workers: int, rounds: int) -> dict:
 
 
 def _build_engine(*, depth: int, sampler=None, device_cache: int = 0,
-                  mesh: int = 0):
+                  mesh: int = 0, bucket: str = "round", combine: str = "flat",
+                  pool=None, steps_cap: int = 8):
     import jax
 
     from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
@@ -126,11 +133,14 @@ def _build_engine(*, depth: int, sampler=None, device_cache: int = 0,
         dataset=ds, loss_fn=loss, init_params=params,
         optimizer=sgd(0.1, momentum=0.9), placement=make_placement("lb"),
         sampler=sampler or UniformSampler(256, 32),
-        pool=WorkerPool.homogeneous(4, type_name="a40", concurrency=2),
+        pool=pool or WorkerPool.homogeneous(4, type_name="a40",
+                                            concurrency=2),
         telemetry=SyntheticTelemetry(),
-        config=EngineConfig(steps_cap=8, batch_size=8, pipeline_depth=depth,
+        config=EngineConfig(steps_cap=steps_cap, batch_size=8,
+                            pipeline_depth=depth,
                             device_cache_batches=device_cache,
-                            mesh_workers=mesh))
+                            mesh_workers=mesh, bucket_mode=bucket,
+                            combine_mode=combine))
 
 
 def _engine_comparison(*, rounds: int) -> dict:
@@ -242,6 +252,68 @@ def _mesh_comparison(*, rounds: int, capacity: int = 768) -> dict:
     return out
 
 
+def _hierarchy_comparison(*, rounds: int) -> dict:
+    """Hierarchical mesh execution on a HETEROGENEOUS pool (two fast + two
+    slow workers — LB placement hands the slow ones fewer batches, so
+    per-worker stream lengths genuinely differ) under zipf skew:
+
+    * ``bucket_mode="worker"`` must dispatch fewer padded steps than
+      ``"round"`` with bit-identical losses and O(log S) executables;
+    * ``combine_mode="tree"`` (per-shard partial merge) must shrink the
+      cross-shard combine transfer, with losses equal to the flat combine
+      to float tolerance (the hierarchy re-associates the mean)."""
+    import numpy as np
+
+    from repro.core import ZipfSampler
+    from repro.distributed import WorkerPool
+
+    def hetero_pool():
+        return WorkerPool.from_specs([("a40", 1.0, 2), ("a40", 1.0, 2),
+                                      ("2080ti", 0.35, 2),
+                                      ("2080ti", 0.35, 2)])
+
+    variants = {
+        "round": dict(bucket="round", combine="flat"),
+        "worker": dict(bucket="worker", combine="flat"),
+        "tree": dict(bucket="worker", combine="tree"),
+    }
+    # 2 shards x 2 workers: each shard has a real multi-worker block to
+    # merge locally (4 shards over 4 workers would leave one lane per
+    # shard — nothing for the tree to shrink).
+    out: dict = {"shards": 2, "rounds": rounds}
+    losses = {}
+    for tag, kw in variants.items():
+        eng = _build_engine(depth=1, mesh=2, steps_cap=16,
+                            sampler=ZipfSampler(256, 32, a=1.2),
+                            pool=hetero_pool(), **kw)
+        eng.run(2)     # warm the executables outside the timing
+        t0 = time.perf_counter()
+        res = eng.run(rounds)
+        wall = time.perf_counter() - t0
+        losses[tag] = [r.loss for r in res]
+        out[tag] = {
+            "wall_s_per_round": wall / rounds,
+            "padded_steps": int(sum(r.padded_steps for r in res)),
+            "combine_bytes": int(res[-1].combine_bytes),
+            "worker_step_compiles":
+                eng.compile_stats["worker_step"]["compiles"],
+        }
+    out["bucket_modes_identical"] = losses["round"] == losses["worker"]
+    out["tree_combine_allclose"] = bool(np.allclose(
+        np.asarray(losses["worker"]), np.asarray(losses["tree"]),
+        rtol=1e-5))
+    pr, pw = out["round"]["padded_steps"], out["worker"]["padded_steps"]
+    out["padded_saved_fraction"] = 1.0 - pw / pr if pr else 0.0
+    # acceptance: per-worker buckets trade O(log S) executables for
+    # strictly less padding; the shard-local merge tree strictly shrinks
+    # the cross-shard transfer
+    assert out["bucket_modes_identical"], losses
+    assert out["tree_combine_allclose"], losses
+    assert pw < pr, out
+    assert out["tree"]["combine_bytes"] < out["round"]["combine_bytes"], out
+    return out
+
+
 def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
         engine_rounds: int = 8) -> list[str]:
     pack = _pack_comparison(cohort=cohort, workers=workers,
@@ -249,9 +321,10 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
     engine = _engine_comparison(rounds=engine_rounds)
     cache = _cache_comparison(rounds=engine_rounds)
     mesh = _mesh_comparison(rounds=engine_rounds)
+    hierarchy = _hierarchy_comparison(rounds=engine_rounds)
 
     record = {"benchmark": "pipeline", "pack": pack, "engine": engine,
-              "device_cache": cache, "mesh": mesh}
+              "device_cache": cache, "mesh": mesh, "hierarchy": hierarchy}
     out_path = os.environ.get(
         "POLLEN_BENCH_OUT",
         os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json"))
@@ -284,6 +357,14 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
                     f"{m['hit_rate']:.2f}")
         rows.append(f"bench_pipeline,mesh_{tag}_worker_step_compiles,"
                     f"{m['worker_step_compiles']}")
+    for tag in ("round", "worker", "tree"):
+        h = hierarchy[tag]
+        rows.append(f"bench_pipeline,hierarchy_{tag}_padded_steps,"
+                    f"{h['padded_steps']}")
+        rows.append(f"bench_pipeline,hierarchy_{tag}_combine_bytes,"
+                    f"{h['combine_bytes']}")
+    rows.append(f"bench_pipeline,hierarchy_padded_saved_fraction,"
+                f"{hierarchy['padded_saved_fraction']:.2f}")
     # acceptance: the vectorized pack must at least halve host pack+pad time
     assert pack["speedup_x"] >= 2.0, pack
     # acceptance: deepening the pipeline never hides LESS of the pack

@@ -16,9 +16,19 @@ plane.  Two kinds of checks throughout:
   outside a generous multiplicative band (``--time-tol``, default 3x) —
   they catch order-of-magnitude regressions, not scheduler jitter.
 
+Beyond the one-shot anchor comparison, the gate has a **trend** mode for
+the scheduled CI lane (``benchmarks.trend``): ``--append`` adds dated
+records to a JSONL history, ``--trend`` gates the newest record against
+the trailing window *median* — failing only on a sustained regression
+(the two newest records both breach), which is what catches slow drift a
+fixed anchor never sees.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.perf_gate BASELINE.json FRESH.json
+    PYTHONPATH=src python -m benchmarks.perf_gate --append trend.jsonl \
+        fresh-bench.json fresh-control.json --stamp 2026-08-01
+    PYTHONPATH=src python -m benchmarks.perf_gate --trend trend.jsonl
 """
 
 from __future__ import annotations
@@ -141,6 +151,45 @@ def compare(
                 f"{base_hit:.2f} (slack {hit_rate_slack})",
             )
 
+    # -- machine-independent: hierarchical mesh execution ---------------------
+    ident = require("hierarchy.bucket_modes_identical")
+    if ident is not None:
+        check(bool(ident), "per-worker S buckets changed training losses")
+    tree_ok = require("hierarchy.tree_combine_allclose")
+    if tree_ok is not None:
+        check(bool(tree_ok), "tree combine drifted beyond float tolerance from the flat combine")
+    pad_round = require("hierarchy.round.padded_steps")
+    pad_worker = require("hierarchy.worker.padded_steps")
+    if pad_round is not None and pad_worker is not None:
+        check(
+            pad_worker < pad_round,
+            f"bucket_mode=worker padded steps {pad_worker} not below "
+            f"bucket_mode=round's {pad_round} — the per-worker buckets buy nothing",
+        )
+    comp = require("hierarchy.worker.worker_step_compiles")
+    if comp is not None:
+        # per-worker buckets may compile one executable per distinct S
+        # bucket — O(log S), not one per (worker x round)
+        check(
+            comp <= 12,
+            f"hierarchy: {comp} worker-step compiles with per-worker buckets "
+            f"(expected O(log S), <= 12)",
+        )
+        base = _get(baseline, "hierarchy.worker.worker_step_compiles")
+        if base is not None:
+            check(
+                comp <= base,
+                f"hierarchy: worker-bucket compiles grew: {comp} vs baseline {base}",
+            )
+    cb_flat = require("hierarchy.round.combine_bytes")
+    cb_tree = require("hierarchy.tree.combine_bytes")
+    if cb_flat is not None and cb_tree is not None:
+        check(
+            cb_tree < cb_flat,
+            f"hierarchy: tree combine transfer {cb_tree}B not below the flat "
+            f"combine's {cb_flat}B — the shard-local merge shrinks nothing",
+        )
+
     # -- cross-run timing band ----------------------------------------------
     pack_s = require("pack.vectorized_pack_s_per_round")
     base_s = _get(baseline, "pack.vectorized_pack_s_per_round")
@@ -250,16 +299,63 @@ def compare_control(
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline", help="checked-in BENCH_*.json")
-    ap.add_argument("fresh", help="freshly produced benchmark JSON")
+    ap.add_argument("baseline", nargs="?", help="checked-in BENCH_*.json")
+    ap.add_argument("fresh", nargs="*", help="freshly produced benchmark JSON(s)")
     ap.add_argument("--time-tol", type=float, default=3.0)
     ap.add_argument("--overlap-slack", type=float, default=0.15)
     ap.add_argument("--hit-rate-slack", type=float, default=0.15)
+    ap.add_argument(
+        "--append",
+        metavar="TREND",
+        default=None,
+        help="append the positional benchmark JSON(s) as dated records to "
+        "this JSONL trend file and exit (the nightly lane's write half)",
+    )
+    ap.add_argument(
+        "--trend",
+        metavar="TREND",
+        default=None,
+        help="gate the newest record in this JSONL trend file against the "
+        "trailing window median (fails only on a SUSTAINED regression: "
+        "the two newest records both breach)",
+    )
+    ap.add_argument("--stamp", default=None, help="date stamp for --append records")
+    ap.add_argument("--window", type=int, default=7, help="--trend trailing window size")
     args = ap.parse_args(argv)
 
+    if args.append or args.trend:
+        from benchmarks.trend import append_records, compare_trend, load_trend
+
+        if args.append:
+            paths = ([args.baseline] if args.baseline else []) + list(args.fresh)
+            if not paths:
+                print("perf gate: --append needs at least one benchmark JSON")
+                return 2
+            stamp = args.stamp or "unstamped"
+            n = append_records(args.append, paths, stamp=stamp)
+            print(f"perf gate: appended {n} record(s) to {args.append} [{stamp}]")
+            return 0
+        entries = load_trend(args.trend)
+        failures, warnings = compare_trend(entries, window=args.window)
+        for msg in warnings:
+            print(f"  WARN {msg}")
+        if failures:
+            print(f"perf gate [trend]: {len(failures)} sustained regression(s)")
+            for msg in failures:
+                print(f"  FAIL {msg}")
+            return 1
+        print(
+            f"perf gate [trend]: PASS ({len(entries)} record(s), "
+            f"window {args.window}, {len(warnings)} warning(s))"
+        )
+        return 0
+
+    if not args.baseline or len(args.fresh) != 1:
+        print("perf gate: need BASELINE and FRESH (or --append/--trend)")
+        return 2
     with open(args.baseline) as f:
         baseline = json.load(f)
-    with open(args.fresh) as f:
+    with open(args.fresh[0]) as f:
         fresh = json.load(f)
     base_kind = baseline.get("benchmark", "pipeline")
     kind = fresh.get("benchmark", base_kind)

@@ -1,0 +1,156 @@
+"""Benchmark trend tracking: the scheduled CI lane's memory.
+
+The single-PR perf gate compares a fresh run against the checked-in
+anchor — it catches a PR that regresses, but not a slow drift where every
+PR stays inside its band while the anchors quietly rot (the pfl-research
+lesson: a simulator's speed claims stay honest only under a continuously
+run benchmark).  The nightly lane therefore appends one dated record per
+benchmark to a JSONL *trend* file (persisted across runs via the CI
+cache) and gates the newest record against the TRAILING WINDOW MEDIAN of
+its predecessors instead of a fixed anchor:
+
+* **band** metrics (wall-clock timings) fail above ``median * tol`` —
+  runner-to-runner noise is huge, so only a sustained multiple trips it;
+* **floor** metrics (overlap / hit-rate fractions, speedups) fail below
+  ``median - tol``;
+* **count** metrics (recompiles, padded steps, audit violations) fail
+  above ``median + tol`` — these are deterministic, so the slack is 0 for
+  most of them.
+
+A breach by the newest record alone is a *warning* (one bad nightly run
+happens); the gate only fails when the newest AND the previous record
+both breach — a **sustained** regression.  Fewer than three records of a
+kind pass trivially (the trend has no memory yet).
+
+Used by ``benchmarks.perf_gate`` via ``--append`` / ``--trend``; the
+metric catalog below is the single list both the appender and the gate
+read.
+"""
+
+from __future__ import annotations
+
+import json
+from statistics import median
+
+__all__ = ["TREND_METRICS", "load_trend", "append_records", "compare_trend"]
+
+# (dotted path into the benchmark record, mode, tolerance)
+TREND_METRICS: dict = {
+    "pipeline": [
+        ("pack.vectorized_pack_s_per_round", "band", 2.0),
+        ("engine.depth1.wall_s_per_round", "band", 2.0),
+        ("engine.depth1.overlap_fraction", "floor", 0.15),
+        ("engine.depth2.overlap_fraction", "floor", 0.15),
+        ("device_cache.on.hit_rate", "floor", 0.10),
+        ("mesh.shards2.hit_rate", "floor", 0.10),
+        ("engine.depth1.recompiles", "count", 0),
+        ("mesh.shards4.worker_step_compiles", "count", 0),
+        ("hierarchy.worker.worker_step_compiles", "count", 0),
+        ("hierarchy.worker.padded_steps", "count", 0),
+        ("hierarchy.tree.combine_bytes", "count", 0),
+    ],
+    "control": [
+        ("refit.full_refit_ms", "band", 2.0),
+        ("refit.reuse_speedup_x", "floor", 1.0),
+        ("scenario.adapt.gain_x", "floor", 0.10),
+        ("barrier.audit_violations", "count", 0),
+        ("scenario.skew.false_drifts", "count", 0),
+        ("scenario.straggler.detect_delay", "count", 2),
+    ],
+}
+
+
+def _get(record: dict, path: str):
+    node = record
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def load_trend(path: str) -> list[dict]:
+    """Read a JSONL trend file: one ``{"stamp", "benchmark", "record"}``
+    object per line, oldest first.  A missing file is an empty trend."""
+    entries: list[dict] = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    entries.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    return entries
+
+
+def append_records(path: str, record_paths: list[str], *, stamp: str) -> int:
+    """Append one dated trend entry per benchmark JSON; returns the count."""
+    entries = []
+    for rp in record_paths:
+        with open(rp) as f:
+            record = json.load(f)
+        entries.append(
+            {
+                "stamp": stamp,
+                "benchmark": record.get("benchmark", "pipeline"),
+                "record": record,
+            }
+        )
+    with open(path, "a") as f:
+        for e in entries:
+            f.write(json.dumps(e, sort_keys=True) + "\n")
+    return len(entries)
+
+
+def _breach(value, med, mode: str, tol: float) -> bool:
+    if value is None or med is None:
+        return False
+    if mode == "band":
+        return value > med * tol
+    if mode == "floor":
+        return value < med - tol
+    return value > med + tol  # "count"
+
+
+def compare_trend(entries: list[dict], *, window: int = 7) -> tuple[list[str], list[str]]:
+    """Gate the newest record of each benchmark kind against its history.
+
+    Returns ``(failures, warnings)``: a metric that breaches the trailing
+    window median in BOTH of the two newest records is a failure
+    (sustained); in the newest only, a warning.  Kinds with fewer than
+    three records pass trivially.
+    """
+    failures: list[str] = []
+    warnings: list[str] = []
+    by_kind: dict[str, list[dict]] = {}
+    for e in entries:
+        by_kind.setdefault(e.get("benchmark", "pipeline"), []).append(e)
+    for kind, metrics in TREND_METRICS.items():
+        series = by_kind.get(kind, [])
+        if len(series) < 3:
+            continue
+        newest, prev = series[-1]["record"], series[-2]["record"]
+        history = [e["record"] for e in series[-(window + 1) : -1]]
+        for path, mode, tol in metrics:
+            past = [v for v in (_get(r, path) for r in history) if v is not None]
+            if not past:
+                continue
+            med = median(past)
+            vn = _get(newest, path)
+            if vn is None:
+                failures.append(f"{kind}: newest record is missing {path!r}")
+                continue
+            hit_now = _breach(vn, med, mode, tol)
+            if hit_now and _breach(_get(prev, path), med, mode, tol):
+                failures.append(
+                    f"{kind}: {path} sustained regression — newest {vn:g} vs "
+                    f"trailing median {med:g} ({mode}, tol {tol:g}) in the "
+                    f"last two runs"
+                )
+            elif hit_now:
+                warnings.append(
+                    f"{kind}: {path} newest {vn:g} breaches trailing median "
+                    f"{med:g} ({mode}, tol {tol:g}) — watching for a repeat"
+                )
+    return failures, warnings

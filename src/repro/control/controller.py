@@ -34,7 +34,7 @@ no prep consumes a round that has not finished.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -138,6 +138,11 @@ class ControlPlane:
         # Per-worker residual EWMAs (mesh path: |meas - pred| / pred of each
         # worker's exact wall time) — observability for which worker drifts.
         self.worker_residuals: dict = {}  # wid -> ewma
+        # Tombstones for failed wids: pending worker meta recorded before
+        # the failure must not resurrect a dead worker's residual when it
+        # flushes after the pool event (cleared when the wid rejoins).
+        self._dead_wids: set = set()
+        self.cache_rebalances = 0  # orphan-shard pool reclaims observed
         if self.autoconc is not None and pool is not None:
             # Seed each knob at its current (estimated) slot count — the
             # engine's pool carries the Table-3 / analytic-estimate values.
@@ -181,7 +186,12 @@ class ControlPlane:
         # Mesh path: fold each worker's exact (predicted, measured) pair
         # into its residual EWMA — which *worker* mispredicts, not just
         # which type.  Producer-side, round order (rides the same flush).
+        # Dead wids are skipped: their pending meta was discarded at the
+        # pool event, and this filter is the belt for rows recorded in the
+        # same flush window.
         for _, wid, _, pred_s, meas_s in out.worker_meta:
+            if wid in self._dead_wids:
+                continue
             if pred_s > 0:
                 err = abs(meas_s - pred_s) / pred_s
                 prev = self.worker_residuals.get(wid)
@@ -247,6 +257,11 @@ class ControlPlane:
                 self.drift.reset(tname, t)
             if e.kind == "fail":
                 self.worker_residuals.pop(wid, None)
+                self._dead_wids.add(wid)
+                if self.measured is not None:
+                    self.measured.discard_workers([wid])
+            elif e.kind == "join":
+                self._dead_wids.discard(wid)
             if self.autoconc is not None:
                 key = self._slot_key(tname, wid)
                 if e.kind == "join":
@@ -267,6 +282,22 @@ class ControlPlane:
                 ):
                     self.autoconc.forget(tname)
             self.log.append((t, e.kind, tname))
+
+    def on_cache_rebalance(self, t: int, event: dict) -> None:
+        """Journal an orphan-shard pool rebalance (engine-reported,
+        producer-side): which shards are live and where the row budget
+        went.  Keeps the control log a complete account of why cache (and
+        therefore placement-affinity) behavior changed at round ``t``."""
+        self.cache_rebalances += 1
+        self.log.append(
+            (
+                t,
+                "cache_rebalance",
+                f"live={event.get('live_shards')} "
+                f"capacities={event.get('capacities')} "
+                f"rows_moved={event.get('rows_moved')}",
+            )
+        )
 
     # -- consumer side -------------------------------------------------------
     def round_executed(
@@ -324,6 +355,7 @@ class ControlPlane:
             "telemetry_mode": self.cfg.telemetry_mode,
             "fallback_rounds": self.fallback_rounds,
             "events": len(self.log),
+            "cache_rebalances": self.cache_rebalances,
         }
         if self.measured is not None:
             out["barrier"] = self.measured.stats()

@@ -86,6 +86,7 @@ class MeasuredTelemetry:
     rows_flushed: int = 0
     rows_attributed: int = 0  # via predicted-share attribution (record)
     rows_exact: int = 0  # via exact measurement (record_rows / worker times)
+    worker_rows_discarded: int = 0  # pending per-worker meta dropped on fail
     finish_seq: dict = field(default_factory=dict)  # round -> seq
     prep_seq: dict = field(default_factory=dict)  # round -> seq
     audit: list = field(default_factory=list)  # [_AuditEntry]
@@ -234,6 +235,25 @@ class MeasuredTelemetry:
             )
         return out
 
+    def discard_workers(self, wids) -> int:
+        """Drop pending per-worker meta rows of failed workers.
+
+        A worker can fail between the consumer recording its exact wall
+        time and the producer flushing it: without this, a later flush
+        would resurrect the dead wid's drift-residual EWMA that the
+        pool-event handler just removed (and, after an orphaned mesh shard
+        is reclaimed, keep attributing telemetry to a worker that no longer
+        exists).  Per-client rows are kept — they are typed, not wid'd, and
+        the measurements were real.  Returns the number of rows dropped.
+        """
+        wids = {int(w) for w in wids}
+        with self._cond:
+            before = len(self._pending_workers)
+            self._pending_workers = [w for w in self._pending_workers if int(w[1]) not in wids]
+            dropped = before - len(self._pending_workers)
+            self.worker_rows_discarded += dropped
+        return dropped
+
     # -- lifecycle -----------------------------------------------------------
     def begin_run(self, first_round: int) -> None:
         """Arm the barrier for a run starting at ``first_round``: rounds
@@ -284,7 +304,9 @@ class MeasuredTelemetry:
             "rows_flushed": self.rows_flushed,
             "rows_attributed": self.rows_attributed,
             "rows_exact": self.rows_exact,
+            "worker_rows_discarded": self.worker_rows_discarded,
             "pending_rows": len(self._pending_rows),
+            "pending_worker_rows": len(self._pending_workers),
             "last_finished": self.last_finished,
         }
 

@@ -74,17 +74,27 @@ Mesh execution (``EngineConfig.mesh_workers = K >= 2``): the round runs as
 fused step.  The packer partitions the cohort's plan by worker
 (``split_plan_by_worker``), each worker's ``[1, P, S]`` block is H2D'd to
 its shard's device (``WorkerShardMap``: ``wid % K``, stable under churn),
-the per-worker programs — ONE shared compiled executable, since every
-worker uses the round's bucketed S — are dispatched asynchronously and
-**synced individually**, and a separate combine program reduces the
-concatenated lane partials with exactly the fused step's tail.  Losses are
-bit-identical across shard counts 1/2/4 at any pipeline depth
-(test-enforced; shard count 1 IS the fused single-program path), while the
-per-worker syncs give ``MeasuredTelemetry`` exact per-worker wall times on
-any backend — the round-level predicted-share attribution path is unused —
-and the device cache splits into per-shard pools with optional cache-aware
-placement (``cache_affinity``: load-neutral equal-batch/equal-type swaps
-toward the shard holding a client's rows).
+the per-worker programs — ONE shared compiled executable with
+``bucket_mode="round"``, or one per distinct per-worker S bucket with
+``bucket_mode="worker"`` (O(log S) executables; short workers skip their
+trailing padded steps, counted in ``RoundResult.padded_steps``) — are
+dispatched asynchronously and **synced individually**, and the lane
+partials reduce through either one global combine (``combine_mode="flat"``:
+exactly the fused step's tail on the concatenated partials) or §3.3's
+hierarchy (``combine_mode="tree"``: a per-shard partial-merge program,
+then the same tail over one merged partial per shard — O(K) cross-shard
+transfer, ``RoundResult.combine_bytes``).  Losses are bit-identical
+across shard counts 1/2/4 × bucket modes at any pipeline depth
+(test-enforced; shard count 1 IS the fused single-program path; the tree
+combine matches to float tolerance and is itself depth/bucket-invariant),
+while the per-worker syncs give ``MeasuredTelemetry`` exact per-worker
+wall times on any backend — the round-level predicted-share attribution
+path is unused — and the device cache splits into per-shard pools with
+optional cache-aware placement (``cache_affinity``: load-neutral
+equal-batch/equal-type swaps toward the shard holding a client's rows)
+and orphan-shard reclamation (``DeviceBatchCache.rebalance``: a shard
+whose last worker failed lends its row budget to the survivors until a
+matching wid rejoins).
 
 The number of distinct compiled programs is bounded by bucketing the stream
 length S to the next {1x, 1.5x} power-of-two multiple (beyond-paper
@@ -111,12 +121,12 @@ from repro.core.sampling import restore_sampler, sampler_state
 from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
                                  build_round_masks, gather_content_rows,
                                  padding_stats, plan_round,
-                                 split_plan_by_worker)
+                                 split_plan_by_worker, worker_stream_lengths)
 from repro.data.device_cache import CachePlan, DeviceBatchCache
 from repro.distributed.sharding import WorkerShardMap
 from repro.fl.round import (StepCompileCache, make_combine_step,
                             make_gather_round_step, make_round_step,
-                            make_worker_round_step)
+                            make_shard_merge_step, make_worker_round_step)
 from repro.fl.strategy import FedAvg, Strategy
 
 
@@ -164,6 +174,9 @@ class RoundResult:
     barrier_stall_s: float = 0.0   # producer stall at the refit barrier
     drift_fallback: bool = False   # placed by the BB fallback (drift alarm)
     affinity_swaps: int = 0        # cache-affinity client swaps this round
+    padded_steps: int = 0          # dispatched-but-masked scan steps (the
+    #                                idle time bucket_mode="worker" attacks)
+    combine_bytes: int = 0         # cross-shard combine transfer (mesh path)
 
 
 @dataclass
@@ -187,6 +200,14 @@ class EngineConfig:
     mesh_workers: int = 0          # 0/1 = one fused program; K >= 2 = one
     #                                program per worker over K mesh shards
     cache_affinity: bool = False   # prefer the shard holding a client's rows
+    bucket_mode: str = "round"     # "round": every worker program shares the
+    #                                round's bucketed S (ONE executable);
+    #                                "worker": each worker compiles at its own
+    #                                bucketed S (O(log S) executables, fewer
+    #                                padded steps for short workers)
+    combine_mode: str = "flat"     # "flat": one global combine over all lane
+    #                                partials; "tree": per-shard partial merge
+    #                                before the cross-shard combine (§3.3)
     # -- control plane (repro.control): any non-default knob enables it ----
     telemetry_mode: str = "synthetic"   # "synthetic" | "measured"
     barrier_policy: str = "reuse"       # "reuse" | "stall" (measured mode)
@@ -219,6 +240,24 @@ class EngineConfig:
                 raise ValueError(
                     "cache_affinity requires an enabled device cache "
                     "(device_cache_batches or device_cache_bytes)")
+        if self.bucket_mode not in ("round", "worker"):
+            raise ValueError("bucket_mode must be 'round' or 'worker', "
+                             f"got {self.bucket_mode!r}")
+        if self.bucket_mode == "worker" and self.mesh_workers < 2:
+            # Mirrors the mesh/strategy check: the fused single program has
+            # exactly one S — there is no per-worker program to bucket.
+            raise ValueError(
+                "bucket_mode='worker' requires mesh_workers >= 2 (the fused "
+                "single-program path has one shared stream length; only the "
+                "per-worker mesh programs can compile at their own S)")
+        if self.combine_mode not in ("flat", "tree"):
+            raise ValueError("combine_mode must be 'flat' or 'tree', "
+                             f"got {self.combine_mode!r}")
+        if self.combine_mode == "tree" and self.mesh_workers < 2:
+            raise ValueError(
+                "combine_mode='tree' requires mesh_workers >= 2 (with one "
+                "shard there is no shard-local partial merge to run before "
+                "the cross-shard combine)")
         if self.adapt_granularity not in ("type", "worker"):
             raise ValueError("adapt_granularity must be 'type' or 'worker', "
                              f"got {self.adapt_granularity!r}")
@@ -285,6 +324,8 @@ class _PreparedRound:
     affinity_swaps: int = 0  # cache-affinity swap count this round
     worker_times: list | None = None
     # consumer-set: [(wid, type_name, xs, pred_s, meas_s)]
+    padded_steps: int = 0    # dispatched-but-masked scan steps this round
+    combine_bytes: int = 0   # consumer-set: cross-shard combine transfer
 
 
 class FederatedEngine:
@@ -350,8 +391,9 @@ class FederatedEngine:
                     "the gather path ships every client model and reduces "
                     "host-side in one shot — it has no per-worker partials "
                     "to combine")
-            from repro.launch.mesh import fl_shard_devices
-            devs = fl_shard_devices(self._mesh_shards)
+            from repro.launch.mesh import fl_combine_topology
+            devs, root = fl_combine_topology(self._mesh_shards)
+            self._combine_root = None
             if len(set(devs)) == 1 and devs[0] == jax.devices()[0]:
                 # Single-device host: every shard resolves to the default
                 # device anyway — leave arrays UNCOMMITTED (device=None) so
@@ -360,6 +402,11 @@ class FederatedEngine:
                 # explicitly committed input changes the lowering key once
                 # params become jit outputs).
                 devs = []
+            elif config.combine_mode == "tree":
+                # Multi-device tree combine: the shard merges run where
+                # their partials live; only the merged O(1) partials ship
+                # to the combine root (§3.3's server side).
+                self._combine_root = root
             self._shard_devices = devs
         cache_rows = config.device_cache_batches
         row_bytes = 0
@@ -403,9 +450,18 @@ class FederatedEngine:
             self._step_cache = self._round_step
         self._worker_step = None
         self._combine_step = None
+        self._merge_step = None
+        # Cross-shard combine transfer accounting (mesh path): one lane
+        # partial is a params-shaped theta plus its weight and loss scalars.
+        self._partial_bytes = int(sum(
+            int(np.prod(np.shape(leaf))) * np.dtype(
+                getattr(leaf, "dtype", np.float32)).itemsize
+            for leaf in jax.tree.leaves(init_params))) + 8
         if self._mesh_shards:
-            # Per-worker programs share ONE executable (every worker is a
-            # [1, P, S] block at the round's bucketed S) + one combine.
+            # Per-worker programs share ONE executable with
+            # bucket_mode="round" (every worker is a [1, P, S] block at the
+            # round's bucketed S); bucket_mode="worker" compiles one per
+            # distinct per-worker S bucket (O(log S)) + one combine.
             worker_donate = None
             if config.donate_buffers:
                 # Batches donate unless they are the device cache's
@@ -424,6 +480,14 @@ class FederatedEngine:
                 lambda: make_combine_step(),
                 capacity=config.compile_cache_size, donate="none",
                 donate_argnums=(0,) if config.donate_buffers else ())
+            if config.combine_mode == "tree":
+                # Per-shard partial merge (§3.3 hierarchy).  No donation:
+                # the [1, 1, ...] merged outputs cannot alias the [W_s, P,
+                # ...] lane-partial inputs, so donating would only emit
+                # unusable-buffer warnings.
+                self._merge_step = StepCompileCache(
+                    lambda: make_shard_merge_step(),
+                    capacity=config.compile_cache_size, donate="none")
         # Persistent per-shard sync pool (engine lifetime): spawning and
         # joining an executor inside every round's _execute_mesh would add
         # thread churn to exactly the window measured as exec_s.
@@ -438,13 +502,16 @@ class FederatedEngine:
         n = self._step_cache.compiles
         if self._worker_step is not None:
             n += self._worker_step.compiles + self._combine_step.compiles
+        if self._merge_step is not None:
+            n += self._merge_step.compiles
         return n
 
     @property
     def compile_stats(self) -> dict:
         """Recompile/eviction/hit counters of the round-step cache(s).  On
         the mesh path the totals fold in the per-worker and combine
-        programs (also broken out under ``worker_step`` / ``combine_step``)."""
+        programs (also broken out under ``worker_step`` / ``combine_step``
+        and, with ``combine_mode="tree"``, ``merge_step``)."""
         stats = self._step_cache.stats()
         if self._worker_step is not None:
             ws, cs = self._worker_step.stats(), self._combine_step.stats()
@@ -452,6 +519,11 @@ class FederatedEngine:
                 stats[k] = stats[k] + ws[k] + cs[k]
             stats["worker_step"] = ws
             stats["combine_step"] = cs
+            if self._merge_step is not None:
+                ms = self._merge_step.stats()
+                for k in ("compiles", "evictions", "hits", "entries"):
+                    stats[k] = stats[k] + ms[k]
+                stats["merge_step"] = ms
         return stats
 
     @property
@@ -602,6 +674,16 @@ class FederatedEngine:
         if self._mesh_shards:
             mesh_map = WorkerShardMap.build(workers, self._mesh_shards,
                                             devices=self._shard_devices)
+            if self._device_cache is not None:
+                # Orphan-shard reclamation: a shard whose last worker died
+                # would otherwise strand its capacity_rows/K pool until a
+                # matching wid rejoins.  Rebalance redistributes the dead
+                # shard's row budget over the survivors (and hands it back
+                # on rejoin) — producer-side, in round order, so the LRU
+                # consequences are deterministic at any pipeline depth.
+                ev = self._device_cache.rebalance(mesh_map.live_shards())
+                if ev is not None and ctl is not None:
+                    ctl.on_cache_rebalance(t, ev)
             if self.cfg.cache_affinity and self._device_cache is not None:
                 # Load-neutral swap pass: move cached clients toward the
                 # shard already holding their rows (equal batch count +
@@ -609,16 +691,13 @@ class FederatedEngine:
                 # preserved; only the cache hit pattern improves).  A
                 # shard that lost its last worker to churn is excluded —
                 # its stranded entries must not steer swaps toward a
-                # shard nothing can execute on.
-                live_shards = set(mesh_map.shard_of_wid.values())
-
-                def cached_shard(cid):
-                    home = self._device_cache.shard_for_client(cid)
-                    return home if home in live_shards else None
-
+                # shard nothing can execute on (rebalance above already
+                # dropped them; the filter below is the belt to that
+                # suspender).
                 assignment, n_swaps = apply_cache_affinity(
                     assignment, workers, mesh_map.shard_of_wid,
-                    cached_shard)
+                    self._device_cache.shard_for_client,
+                    live_shards=mesh_map.live_shards())
         shares = None
         loads: dict = {}
         if self.cfg.telemetry_mode == "measured":
@@ -653,6 +732,16 @@ class FederatedEngine:
             # sliced per worker for the per-shard device_puts; the full
             # masks also ship once for the combine program's metrics.
             S = self._s_align(plan.s_real)
+            if self.cfg.bucket_mode == "worker":
+                # Each worker's program runs at its OWN bucketed stream
+                # length: trailing steps beyond it are masked no-ops in
+                # bucket_mode="round" (bitwise, via the guarded fold), so
+                # truncating them changes padded work only — never values.
+                worker_S = [self._s_align(int(s))
+                            for s in worker_stream_lengths(plan)]
+            else:
+                worker_S = [S] * plan.W
+            padded = int(sum(worker_S)) * plan.P - plan.n_steps_total
             if self._device_cache is not None:
                 arrays = build_round_masks(plan, S, buffers=self._pack_buffers)
             else:
@@ -661,7 +750,8 @@ class FederatedEngine:
                     batch_size=self.cfg.batch_size, seq_len=self.cfg.seq_len,
                     s_align=lambda s: S, buffers=self._pack_buffers)
             worker_programs = self._pack_worker_programs(
-                t, plan, S, arrays, assignment, workers, mesh_map, loads)
+                t, plan, worker_S, arrays, assignment, workers, mesh_map,
+                loads)
             pack_s = time.perf_counter() - tp0
             combine_masks = (jax.device_put(arrays.step_mask),
                              jax.device_put(arrays.boundary),
@@ -676,7 +766,8 @@ class FederatedEngine:
                                   telemetry_st=telemetry_st,
                                   worker_programs=worker_programs,
                                   combine_masks=combine_masks,
-                                  affinity_swaps=n_swaps)
+                                  affinity_swaps=n_swaps,
+                                  padded_steps=padded)
         if self._device_cache is not None:
             # Cache path: no full-size host batch buffer exists at all —
             # masks are built host-side as usual, but content travels as a
@@ -710,18 +801,24 @@ class FederatedEngine:
                               n_steps_real=plan.n_steps_total,
                               shares=shares, stall_s=stall_s,
                               fallback=fallback, sampler_st=sampler_st,
-                              telemetry_st=telemetry_st)
+                              telemetry_st=telemetry_st,
+                              padded_steps=(arrays.step_mask.size
+                                            - plan.n_steps_total))
 
-    def _pack_worker_programs(self, t, plan, S, arrays, assignment, workers,
-                              mesh_map, loads):
+    def _pack_worker_programs(self, t, plan, worker_S, arrays, assignment,
+                              workers, mesh_map, loads):
         """Producer half of the mesh path: one (device-arrays, cache-plan)
         bundle per worker, H2D'd to that worker's shard device.
 
-        Every worker shares the round's bucketed S, so all per-worker
-        programs compile to ONE executable.  With the device cache on, each
+        ``worker_S[wi]`` is worker ``wi``'s compiled stream length: the
+        round's shared bucketed S (``bucket_mode="round"`` — all programs
+        compile to ONE executable) or the worker's own bucket
+        (``bucket_mode="worker"`` — O(log S) executables, shorter workers
+        skip their trailing padded steps).  Arrays are packed once at the
+        round's full S and sliced ``[:, :, :S_w]`` per worker (numpy views
+        — no copies before the transfer).  With the device cache on, each
         worker's content travels as its own compact miss array planned
-        against its shard's pool; without it, the full packed arrays are
-        sliced per worker (numpy views — no copies before the transfer)."""
+        against its shard's pool at that worker's S."""
         order = sorted(workers, key=lambda w: w.wid)
         subplans = (split_plan_by_worker(plan)
                     if self._device_cache is not None else None)
@@ -733,11 +830,12 @@ class FederatedEngine:
             slot = slot_counts.get(shard, 0)
             slot_counts[shard] = slot + 1
             sl = slice(wi, wi + 1)
-            mask_d = jax.device_put(arrays.step_mask[sl], dev)
-            bnd_d = jax.device_put(arrays.boundary[sl], dev)
-            wt_d = jax.device_put(arrays.weight[sl], dev)
+            S_w = worker_S[wi]
+            mask_d = jax.device_put(arrays.step_mask[sl, :, :S_w], dev)
+            bnd_d = jax.device_put(arrays.boundary[sl, :, :S_w], dev)
+            wt_d = jax.device_put(arrays.weight[sl, :, :S_w], dev)
             if self._device_cache is not None:
-                cplan = self._device_cache.plan(subplans[wi], S, t,
+                cplan = self._device_cache.plan(subplans[wi], S_w, t,
                                                 shard=shard, worker_slot=slot)
                 miss = gather_content_rows(
                     self.dataset, subplans[wi], cplan.content_mask,
@@ -747,7 +845,8 @@ class FederatedEngine:
             else:
                 cplan = None
                 batches_d = jax.device_put(
-                    {k: v[sl] for k, v in arrays.batches.items()}, dev)
+                    {k: v[sl, :, :S_w] for k, v in arrays.batches.items()},
+                    dev)
             xs = [c.n_batches
                   for c in assignment.per_worker.get(w.wid, [])]
             programs.append((w.wid, w.type_name, shard,
@@ -808,17 +907,54 @@ class FederatedEngine:
         prep.worker_times = [
             (wid, tname, xs, pred, meas[i])
             for i, (wid, tname, _, xs, pred, _) in enumerate(dispatched)]
-        # Combine: concatenate per-worker partials along W (exact — no
-        # arithmetic) and run the reduction tail as one program.  (On a
-        # real multi-device mesh the concat implies the shard→combine
+        # Combine.  Flat mode concatenates every worker's lane partials
+        # along W (exact — no arithmetic) and runs the reduction tail as
+        # one program: O(K·lanes) partials cross to the combine device.
+        # Tree mode (§3.3's hierarchy) first merges each SHARD's partials
+        # on that shard — one shard-merge program per device group — so
+        # only O(K) merged partials cross, and the cross-shard combine is
+        # the same _reduce_partials tail applied to the [K, 1, ...] stack.
+        # (On a real multi-device mesh the concat implies the shard→combine
         # gather; the runtime inserts those transfers.)
-        theta_wp = jax.tree.map(
-            lambda *leaves: jnp.concatenate(leaves, axis=0),
-            *[d[5][0] for d in dispatched])
-        n_wp = jnp.concatenate([d[5][1] for d in dispatched], axis=0)
-        lane_losses = jnp.concatenate([d[5][2] for d in dispatched], axis=0)
+        def _cat(outs, i):
+            if i == 0:
+                return jax.tree.map(
+                    lambda *leaves: jnp.concatenate(leaves, axis=0),
+                    *[o[0] for o in outs])
+            return jnp.concatenate([o[i] for o in outs], axis=0)
+
+        if self._merge_step is not None:
+            by_group: dict[int, list] = {}
+            for d in dispatched:
+                by_group.setdefault(d[2], []).append(d[5])
+            parts = []
+            for shard in sorted(by_group):
+                outs = by_group[shard]
+                th = _cat(outs, 0)
+                n_s = _cat(outs, 1)
+                ls_s = _cat(outs, 2)
+                mfn, _ = self._merge_step.lookup(
+                    (int(n_s.shape[0]), int(n_s.shape[1])))
+                merged = mfn(th, n_s, ls_s)
+                if self._combine_root is not None:
+                    # the cross-shard hop: one merged partial per shard
+                    merged = jax.device_put(merged, self._combine_root)
+                parts.append(merged)
+            theta_wp = _cat(parts, 0)
+            n_wp = _cat(parts, 1)
+            lane_losses = _cat(parts, 2)
+            prep.combine_bytes = len(parts) * self._partial_bytes
+        else:
+            outs = [d[5] for d in dispatched]
+            theta_wp = _cat(outs, 0)
+            n_wp = _cat(outs, 1)
+            lane_losses = _cat(outs, 2)
+            prep.combine_bytes = (int(n_wp.shape[0]) * int(n_wp.shape[1])
+                                  * self._partial_bytes)
         step_mask, boundary, weight = prep.combine_masks
-        fn, _ = self._combine_step.lookup(tuple(step_mask.shape))
+        fn, _ = self._combine_step.lookup(
+            (int(n_wp.shape[0]), int(n_wp.shape[1]))
+            + tuple(step_mask.shape))
         new_params, metrics = fn(self.params, theta_wp, n_wp, lane_losses,
                                  step_mask, boundary, weight)
         self.params = new_params
@@ -887,7 +1023,9 @@ class FederatedEngine:
             cache_bytes_saved=bytes_saved,
             exec_time=prep.exec_s, barrier_stall_s=prep.stall_s,
             drift_fallback=prep.fallback,
-            affinity_swaps=prep.affinity_swaps)
+            affinity_swaps=prep.affinity_swaps,
+            padded_steps=prep.padded_steps,
+            combine_bytes=prep.combine_bytes)
         self.history.append(result)
         self.round_idx = t + 1
         self._sampler_ckpt_state = prep.sampler_st

@@ -242,7 +242,8 @@ class LearningBasedPlacement(Placement):
 
 
 def apply_cache_affinity(assignment: Assignment, workers, shard_of_wid,
-                         cached_shard_of) -> tuple[Assignment, int]:
+                         cached_shard_of, *,
+                         live_shards=None) -> tuple[Assignment, int]:
     """Cache-aware post-pass: swap clients so device-cached ones land on the
     mesh shard that already holds their rows.
 
@@ -257,6 +258,10 @@ def apply_cache_affinity(assignment: Assignment, workers, shard_of_wid,
     ``shard_of_wid``: wid -> mesh shard; ``cached_shard_of``: cid -> shard
     currently holding the client's rows (None = not cached, e.g.
     :meth:`repro.data.device_cache.DeviceBatchCache.shard_for_client`).
+    ``live_shards``: optional set of shards that still have workers — a
+    client whose rows live on a shard outside it (its last worker failed
+    mid-churn) is treated as uncached, so stranded entries never steer a
+    swap toward a shard nothing can execute on.
     Returns ``(assignment, n_swaps)`` — a new Assignment when swaps
     happened (``predicted_load`` is carried over; it is invariant).
     """
@@ -274,6 +279,9 @@ def apply_cache_affinity(assignment: Assignment, workers, shard_of_wid,
             continue
         for pos, c in enumerate(per[wid]):
             home = cached_shard_of(c.cid)
+            if (home is not None and live_shards is not None
+                    and home not in live_shards):
+                home = None
             if home is None or home != shard:
                 candidates.setdefault(
                     (w.type_name, shard, c.n_batches), []).append((wid, pos))

@@ -38,7 +38,7 @@ import numpy as np
 __all__ = ["build_round_arrays", "build_round_arrays_loop", "RoundArrays",
            "RoundPlan", "PackBuffers", "plan_round", "padding_stats",
            "lane_split", "build_round_masks", "gather_content_rows",
-           "split_plan_by_worker"]
+           "split_plan_by_worker", "worker_stream_lengths"]
 
 
 @dataclass
@@ -180,6 +180,20 @@ def split_plan_by_worker(plan: RoundPlan) -> list[RoundPlan]:
             b_p=plan.b_p[bsel], b_s=plan.b_s[bsel],
             b_weight=plan.b_weight[bsel], b_cid=plan.b_cid[bsel],
             b_nb=plan.b_nb[bsel]))
+    return out
+
+
+def worker_stream_lengths(plan: RoundPlan) -> np.ndarray:
+    """Per-worker real stream lengths ``[W]``: each worker row's longest
+    lane fill (1 for an empty worker, mirroring ``plan_round``'s
+    ``min_steps`` floor).  The mesh path's per-worker S bucketing
+    (``EngineConfig.bucket_mode="worker"``) compiles each worker's program
+    at its OWN bucketed length instead of the round's global ``s_real`` —
+    this is where those lengths come from.  A lane's fill is its last
+    boundary position + 1 (lanes fill contiguously from step 0)."""
+    out = np.ones(plan.W, dtype=np.int64)
+    if plan.n_clients:
+        np.maximum.at(out, plan.b_w, plan.b_s + 1)
     return out
 
 

@@ -42,6 +42,18 @@ donate each other's live round base inside a round.  ``shard_for_client``
 exposes where a client's rows currently live — the input to the engine's
 cache-aware placement (prefer the worker whose shard already holds the
 rows).
+
+Orphan-shard reclamation (:meth:`rebalance`): a shard whose last worker
+failed can serve nothing — without intervention its ``capacity_rows / K``
+row budget is stranded until a ``wid ≡ shard (mod K)`` rejoins.  The
+engine calls ``rebalance(live_shards)`` at the top of every mesh round
+prep (producer thread, strict round order, so the LRU consequences are
+deterministic at any pipeline depth): dead shards' entries are dropped and
+their *logical* budget is redistributed over the survivors; when the shard
+comes back, survivors evict back down and the budget returns.  Logical
+capacity is host bookkeeping; the device pool arrays never shrink and only
+grow lazily on the consumer thread (``apply`` reads the plan-time capacity
+snapshot ``CachePlan.pool_rows``, never the producer-owned live value).
 """
 
 from __future__ import annotations
@@ -116,6 +128,7 @@ def _zero_totals() -> dict:
         "miss_clients": 0,
         "insertions": 0,
         "evictions": 0,
+        "reclaim_evictions": 0,
         "bytes_saved": 0,
         "rounds": 0,
     }
@@ -124,13 +137,20 @@ def _zero_totals() -> dict:
 @dataclass
 class _Shard:
     """One mesh shard's slice of the cache: its own LRU, free list, device
-    pool arrays, round bases, and accounting."""
+    pool arrays, round bases, and accounting.
+
+    ``capacity`` is the LOGICAL row budget (producer-owned; rebalance moves
+    it between shards); ``pool_rows`` is the PHYSICAL device-array length
+    (consumer-owned; set at pool allocation, grows lazily, never shrinks).
+    After a shrink, entries may legally hold rows ``>= capacity`` — they
+    stay valid (the array still covers them) and age out of the LRU."""
 
     capacity: int
     device: object = None  # jax.Device the pool/bases live on (None = default)
     entries: OrderedDict = field(default_factory=OrderedDict)  # cid -> _Entry
     free: list = field(default_factory=list)
     pools: dict | None = None
+    pool_rows: int = 0  # physical device-array length (0 = not allocated yet)
     bases: OrderedDict = field(default_factory=OrderedDict)
     totals: dict = field(default_factory=_zero_totals)
     max_slot: int = 0  # highest worker slot seen (scales the base LRU cap)
@@ -141,6 +161,9 @@ class _Shard:
     def reset(self) -> None:
         self.entries.clear()
         self.free = list(range(self.capacity - 1, -1, -1))
+
+    def rows_used(self) -> int:
+        return sum(e.nb for e in self.entries.values())
 
 
 @dataclass
@@ -168,6 +191,9 @@ class CachePlan:
     bytes_saved: int = 0  # filled by apply() (needs leaf dtypes)
     shard: int = 0  # mesh shard whose pool serves this plan
     worker_slot: int = 0  # worker's slot within the shard (base isolation)
+    pool_rows: int = 0  # shard's logical capacity at plan time: apply()
+    #                     grows the physical pool to at least this, so the
+    #                     consumer never reads the producer-owned live value
 
     @property
     def hit_rate(self) -> float:
@@ -251,6 +277,8 @@ class DeviceBatchCache:
         ]
         self._rowsig: tuple | None = None
         self._row_bytes = 0
+        self.rebalances = 0  # orphan-shard budget moves (see rebalance())
+        self.rows_moved = 0  # logical capacity rows moved across shards
         self._asm_cache = StepCompileCache(
             lambda: _assemble_round,
             capacity=compile_cache_size,
@@ -343,6 +371,7 @@ class DeviceBatchCache:
             evicted_clients=evicted,
             shard=int(shard),
             worker_slot=int(worker_slot),
+            pool_rows=sh.capacity,
         )
 
     @staticmethod
@@ -386,10 +415,25 @@ class DeviceBatchCache:
                 for rows in miss_rows.values()
             )
         if sh.pools is None:
+            sh.pool_rows = max(cplan.pool_rows, 1)
             sh.pools = {
-                name: self._device_zeros((sh.capacity,) + rows.shape[1:], rows.dtype, sh)
+                name: self._device_zeros((sh.pool_rows,) + rows.shape[1:], rows.dtype, sh)
                 for name, rows in miss_rows.items()
             }
+        elif cplan.pool_rows > sh.pool_rows:
+            # Rebalance grew this shard's logical budget past the physical
+            # array: extend with zero rows (the plan only hands out row
+            # indices below its snapshot, so growth always lands before the
+            # first scatter that needs it — consumer thread, round order).
+            extra = cplan.pool_rows - sh.pool_rows
+            sh.pools = {
+                name: jnp.concatenate(
+                    [pool, self._device_zeros((extra,) + pool.shape[1:], pool.dtype, sh)],
+                    axis=0,
+                )
+                for name, pool in sh.pools.items()
+            }
+            sh.pool_rows = cplan.pool_rows
         shape = (cplan.W, cplan.P, cplan.S)
         # Round bases are keyed per worker slot: two workers of one shard
         # must never pop (and donate) each other's live base inside a round.
@@ -408,10 +452,10 @@ class DeviceBatchCache:
         n_hit = _pow2(int(cplan.hit_src.shape[0])) if cplan.hit_src.size else 1
         miss_dst = _pad_idx(cplan.miss_dst, cplan.n_miss_rows, fill=M)
         ins_src = _pad_idx(cplan.ins_src, n_ins, fill=0)
-        ins_dst = _pad_idx(cplan.ins_dst, n_ins, fill=sh.capacity)
+        ins_dst = _pad_idx(cplan.ins_dst, n_ins, fill=sh.pool_rows)
         hit_src = _pad_idx(cplan.hit_src, n_hit, fill=0)
         hit_dst = _pad_idx(cplan.hit_dst, n_hit, fill=M)
-        key = (shape, cplan.n_miss_rows, n_ins, n_hit, sh.capacity, rowsig)
+        key = (shape, cplan.n_miss_rows, n_ins, n_hit, sh.pool_rows, rowsig)
         fn, _ = self._asm_cache.lookup(key)
         batches, sh.pools = fn(
             base,
@@ -456,6 +500,68 @@ class DeviceBatchCache:
             del sh.bases[key]
         sh.max_slot = min(sh.max_slot, max(n_slots - 1, 0))
 
+    def rebalance(self, live_shards) -> dict | None:
+        """Redistribute the row budget over the shards that can execute.
+
+        Producer-side (strict round order), called by the engine at the top
+        of every mesh round prep.  Shards outside ``live_shards`` lost
+        their last worker: their entries are dropped (nothing can hit them,
+        and affinity must not be steered toward them) and their logical
+        capacity moves to the survivors — deterministically, lowest live
+        shard first for the remainder rows.  When a matching wid rejoins,
+        the same call shrinks the survivors back (evicting least-recent
+        entries over budget) and restores the shard's share.  Returns an
+        event dict when capacities changed, else None.
+        """
+        if self.n_shards == 1:
+            return None
+        live = sorted({int(s) for s in live_shards if 0 <= int(s) < self.n_shards})
+        if not live:
+            return None
+        base, rem = divmod(self.capacity, len(live))
+        targets = [0] * self.n_shards
+        for i, s in enumerate(live):
+            targets[s] = base + (1 if i < rem else 0)
+        current = [sh.capacity for sh in self._shards]
+        if targets == current:
+            return None
+        evicted = 0
+        for s, sh in enumerate(self._shards):
+            if targets[s] != sh.capacity:
+                evicted += self._resize_shard(sh, targets[s])
+        moved = sum(max(0, c - t) for c, t in zip(current, targets))
+        self.rebalances += 1
+        self.rows_moved += moved
+        return {
+            "live_shards": live,
+            "capacities": list(targets),
+            "rows_moved": moved,
+            "entries_evicted": evicted,
+        }
+
+    @staticmethod
+    def _resize_shard(sh: _Shard, cap: int) -> int:
+        """Set one shard's LOGICAL capacity; returns entries evicted.
+
+        Shrink evicts least-recent entries until the held rows fit the new
+        budget; surviving entries may keep row indices ``>= cap`` (the
+        physical array still covers them — it never shrinks), so the free
+        list is rebuilt from the lowest unheld indices below ``cap``,
+        keeping ``rows_used + len(free) == cap`` exact."""
+        evicted = 0
+        rows_used = sh.rows_used()
+        while rows_used > cap:
+            cid, ent = next(iter(sh.entries.items()))
+            del sh.entries[cid]
+            rows_used -= ent.nb
+            evicted += 1
+        used = {int(r) for e in sh.entries.values() for r in e.rows}
+        avail = [r for r in range(cap) if r not in used][: cap - rows_used]
+        sh.free = list(reversed(avail))  # pop() hands out the lowest row first
+        sh.capacity = cap
+        sh.totals["reclaim_evictions"] += evicted
+        return evicted
+
     def invalidate(self) -> None:
         """Drop every cached entry and reset the free lists of every shard
         (pool/base device arrays stay allocated; their content becomes
@@ -494,7 +600,7 @@ class DeviceBatchCache:
 
     @property
     def rows_used(self) -> int:
-        return sum(sh.capacity - len(sh.free) for sh in self._shards)
+        return sum(sh.rows_used() for sh in self._shards)
 
     def _shard_stats(self, s: int) -> dict:
         sh = self._shards[s]
@@ -502,7 +608,7 @@ class DeviceBatchCache:
         steps = out["hit_steps"] + out["miss_steps"]
         out["hit_rate"] = out["hit_steps"] / steps if steps else 0.0
         out["clients_cached"] = len(sh.entries)
-        out["rows_used"] = sh.capacity - len(sh.free)
+        out["rows_used"] = sh.rows_used()
         out["capacity_rows"] = sh.capacity
         return out
 
@@ -517,5 +623,7 @@ class DeviceBatchCache:
         out["compiles"] = self._asm_cache.compiles
         if self.n_shards > 1:
             out["n_shards"] = self.n_shards
+            out["rebalances"] = self.rebalances
+            out["rows_moved"] = self.rows_moved
             out["per_shard"] = [self._shard_stats(s) for s in range(self.n_shards)]
         return out

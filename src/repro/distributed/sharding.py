@@ -76,6 +76,21 @@ class WorkerShardMap:
     def workers_in(self, shard: int) -> list:
         return sorted(w for w, s in self.shard_of_wid.items() if s == shard)
 
+    def live_shards(self) -> set:
+        """Shards with at least one live worker.  A shard outside this set
+        executes nothing this round: cache affinity must not steer clients
+        toward it, and the device cache reclaims its stranded pool
+        (:meth:`repro.data.device_cache.DeviceBatchCache.rebalance`)."""
+        return set(self.shard_of_wid.values())
+
+    def merge_groups(self) -> dict:
+        """The hierarchical-combine topology (``combine_mode="tree"``):
+        shard → its live workers in dispatch (wid) order.  Each group is
+        one shard-local partial-merge program on that shard's device; the
+        cross-shard combine then reduces one partial per group — §3.3's
+        node→server tree, with mesh shards as the nodes."""
+        return {s: self.workers_in(s) for s in sorted(self.live_shards())}
+
 
 @dataclass
 class ShardingRules:

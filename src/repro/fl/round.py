@@ -36,6 +36,20 @@ single-program path (test-enforced across shard counts); what it buys is a
 *per-worker* device sync — exact per-worker wall times for the control
 plane — and per-shard placement of each worker's program on a multi-device
 mesh.
+
+Two hierarchy refinements ride on the decomposition:
+
+* **per-worker S buckets** (``EngineConfig.bucket_mode="worker"``): each
+  worker program compiles at its OWN pow2-bucketed stream length instead
+  of the round's global one — a short worker stops burning padded steps
+  waiting on the longest lane, at the cost of O(log S) cached executables
+  instead of one.  Bit-identity across bucket modes rests on masked
+  trailing steps being *bitwise* no-ops on the scan carry (the guarded
+  fold in :func:`_make_lane_scan`).
+* **shard-local combine trees** (``EngineConfig.combine_mode="tree"``):
+  a per-shard :func:`make_shard_merge_step` partial-merge runs before the
+  cross-shard combine, matching §3.3's node→server hierarchy and cutting
+  the cross-shard transfer from O(K·lanes) to O(K) partials.
 """
 
 from __future__ import annotations
@@ -47,13 +61,14 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import (partial_init, partial_update,
+from repro.core.aggregation import (PartialAggregate, partial_init,
+                                    partial_merge, partial_update,
                                     tree_weighted_mean)
 from repro.optim.optimizers import apply_updates
 
 __all__ = ["make_round_step", "make_worker_round_step", "make_combine_step",
-           "make_gather_round_step", "RoundMetrics", "StepCompileCache",
-           "round_shape_key"]
+           "make_shard_merge_step", "make_gather_round_step", "RoundMetrics",
+           "StepCompileCache", "round_shape_key"]
 
 
 class RoundMetrics(NamedTuple):
@@ -93,8 +108,18 @@ def _make_lane_scan(loss_fn, optimizer, *, agg_impl: str = "xla",
                 theta, jax.tree.map(lambda u: u * m.astype(u.dtype), updates))
             # Masked steps keep the old optimizer state (exact no-op).
             opt_state = _tree_select(m > 0, new_opt, opt_state)
-            # Fold the trained client at its boundary (w*bnd == 0 ⇒ no-op).
-            partial = partial_update(partial, theta, w * bnd, impl=agg_impl)
+            # Fold the trained client at its boundary.  The fold must be a
+            # BITWISE no-op at masked/padded steps, not merely a numeric
+            # one: Eq. 1 rescales the accumulator by N/(N+0), and
+            # fl(fl(acc*N)/N) can flip the last bit for non-pow2 weights
+            # (measured: ~10% of f32 values round differently).  Per-worker
+            # S bucketing (``bucket_mode="worker"``) truncates a short
+            # worker's trailing masked steps entirely, so a fold that
+            # perturbed the partial would break bit-identity between bucket
+            # modes — the select keeps the old partial bit-exactly.
+            nk = w * bnd
+            folded = partial_update(partial, theta, nk, impl=agg_impl)
+            partial = _tree_select(nk > 0, folded, partial)
             # Reset lane to the global model for the next client.
             theta = _tree_select(bnd > 0, global_params, theta)
             opt_state = _tree_select(bnd > 0, opt0, opt_state)
@@ -247,6 +272,52 @@ def make_combine_step():
                                 step_mask, boundary, weight)
 
     return combine
+
+
+def make_shard_merge_step():
+    """One mesh *shard's* half of the hierarchical combine (§3.3's per-node
+    partial merge, ``EngineConfig.combine_mode="tree"``).
+
+    ``merge(theta_wp, n_wp, lane_losses) -> (theta, n, loss)`` folds a
+    shard's ``[W_s, P, ...]`` lane partials into ONE ``[1, 1, ...]``-shaped
+    partial via :func:`~repro.core.aggregation.partial_merge` (a
+    ``lax.scan`` left fold in dispatch order — deterministic association)
+    and a scan-carried loss total.  The shard merge runs on the shard's own
+    device group, so only O(1) partial per shard crosses to the cross-shard
+    combine — O(K) transfer instead of the flat path's O(K·lanes) — and the
+    cross-shard combine is exactly :func:`_reduce_partials` applied to the
+    ``[K, 1, ...]`` stacked shard partials.
+
+    The merged partial stays in running-mean form (Eq. 1), so re-weighting
+    it by its weight in the final :func:`tree_weighted_mean` is the same
+    hierarchy the paper's node→server reduction applies.  Numerics note:
+    the per-shard grouping re-associates the cross-lane weighted mean, so
+    tree-combined losses agree with the flat combine to float tolerance,
+    not bitwise (the flat path stays the default and the bit-identity
+    reference); the tree path itself is deterministic and bit-identical
+    across pipeline depths and bucket modes.
+    """
+
+    def merge(theta_wp, n_wp, lane_losses):
+        flat_theta = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                                  theta_wp)
+        flat_n = n_wp.reshape(-1)
+        flat_loss = lane_losses.reshape(-1)
+        like = jax.tree.map(lambda x: x[0], flat_theta)
+        init = (partial_init(like), jnp.zeros((), flat_loss.dtype))
+
+        def fold(carry, inp):
+            acc, loss_sum = carry
+            theta_i, n_i, loss_i = inp
+            acc = partial_merge(acc, PartialAggregate(theta_i, n_i))
+            return (acc, loss_sum + loss_i), None
+
+        (acc, loss_sum), _ = jax.lax.scan(
+            fold, init, (flat_theta, flat_n, flat_loss))
+        theta = jax.tree.map(lambda x: x[None, None], acc.theta)
+        return theta, acc.weight[None, None], loss_sum[None, None]
+
+    return merge
 
 
 def make_gather_round_step(loss_fn, optimizer, *, grad_clip: float | None = None):

@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_test_mesh", "axis_sizes",
-           "mesh_axis_types_kwargs", "fl_shard_devices"]
+           "mesh_axis_types_kwargs", "fl_shard_devices",
+           "fl_combine_topology"]
 
 
 def mesh_axis_types_kwargs(axes) -> dict:
@@ -62,15 +63,36 @@ def fl_shard_devices(n_shards: int, *, mesh=None, fl_axes=("pod", "data")):
     if mesh is None:
         devs = list(jax.devices())
     else:
-        names = list(mesh.axis_names)
-        keep = [i for i, a in enumerate(names) if a in fl_axes]
-        grid = mesh.devices
-        if keep:
-            # Collapse non-FL axes to their first coordinate: one lead
-            # device per FL-axis slice, in FL-axis-major order.
-            idx = tuple(slice(None) if i in keep else 0
-                        for i in range(grid.ndim))
-            devs = list(grid[idx].reshape(-1))
-        else:
-            devs = [grid.reshape(-1)[0]]
+        devs = _fl_lead_devices(mesh, fl_axes)
     return [devs[s % len(devs)] for s in range(n_shards)]
+
+
+def fl_combine_topology(n_shards: int, *, mesh=None,
+                        fl_axes=("pod", "data")) -> tuple:
+    """Device binding of the hierarchical combine tree
+    (``EngineConfig.combine_mode="tree"``): ``(shard_devices, root)``.
+
+    ``shard_devices[s]`` hosts shard ``s``'s partial-merge program (the
+    shard's lead device — the merge consumes partials already resident
+    there, so no bytes cross shards before it), and ``root`` hosts the
+    cross-shard combine: one O(params)-sized partial per shard crosses to
+    it, instead of every lane partial.  The root is the first shard's lead
+    device — on a real mesh, the server-side reduce of §3.3.  On a
+    single-device host all entries are that device and the topology only
+    structures the programs.
+    """
+    devs = fl_shard_devices(n_shards, mesh=mesh, fl_axes=fl_axes)
+    return devs, devs[0]
+
+
+def _fl_lead_devices(mesh, fl_axes):
+    names = list(mesh.axis_names)
+    keep = [i for i, a in enumerate(names) if a in fl_axes]
+    grid = mesh.devices
+    if keep:
+        # Collapse non-FL axes to their first coordinate: one lead
+        # device per FL-axis slice, in FL-axis-major order.
+        idx = tuple(slice(None) if i in keep else 0
+                    for i in range(grid.ndim))
+        return list(grid[idx].reshape(-1))
+    return [grid.reshape(-1)[0]]

@@ -114,6 +114,7 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  barrier_policy: str = "reuse", drift_threshold: float = 0.0,
                  adapt_interval: int = 0, adapt_granularity: str = "type",
                  mesh_workers: int = 0, cache_affinity: bool = False,
+                 bucket_mode: str = "round", combine_mode: str = "flat",
                  grad_clip: float | None = None) -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
     key = jax.random.key(seed)
@@ -179,6 +180,8 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                             adapt_granularity=adapt_granularity,
                             mesh_workers=mesh_workers,
                             cache_affinity=cache_affinity,
+                            bucket_mode=bucket_mode,
+                            combine_mode=combine_mode,
                             **batch_kw),
         checkpoint_store=CheckpointStore(ckpt_dir) if ckpt_dir else None,
     )
@@ -246,6 +249,23 @@ def _build_parser() -> argparse.ArgumentParser:
                          "mesh shard already holding its rows (load-"
                          "neutral swaps; needs --mesh-workers >= 2 and a "
                          "device cache)")
+    ap.add_argument("--bucket-mode", default="round",
+                    choices=["round", "worker"],
+                    help="mesh stream-length bucketing: 'round' = every "
+                         "worker program shares the round's bucketed S "
+                         "(one executable); 'worker' = each worker "
+                         "compiles at its own bucketed S (O(log S) "
+                         "executables, short workers skip padded steps; "
+                         "needs --mesh-workers >= 2)")
+    ap.add_argument("--combine-mode", default="flat",
+                    choices=["flat", "tree"],
+                    help="mesh partial reduction: 'flat' = one global "
+                         "combine over all lane partials (bit-identical "
+                         "to the fused path); 'tree' = per-shard partial "
+                         "merge before the cross-shard combine (paper "
+                         "3.3's hierarchy, O(shards) transfer; losses "
+                         "match flat to float tolerance; needs "
+                         "--mesh-workers >= 2)")
     ap.add_argument("--seed", type=int, default=1337)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -304,7 +324,9 @@ def main() -> int:
         adapt_interval=args.adapt_interval,
         adapt_granularity=args.adapt_granularity,
         mesh_workers=args.mesh_workers,
-        cache_affinity=args.cache_affinity)
+        cache_affinity=args.cache_affinity,
+        bucket_mode=args.bucket_mode,
+        combine_mode=args.combine_mode)
 
     if args.fail_worker:
         wid, rnd = (int(x) for x in args.fail_worker.split(":"))
@@ -338,6 +360,12 @@ def main() -> int:
         summary["mesh_workers"] = args.mesh_workers
         summary["affinity_swaps"] = int(sum(
             r.affinity_swaps for r in results))
+        summary["bucket_mode"] = args.bucket_mode
+        summary["combine_mode"] = args.combine_mode
+        summary["padded_steps"] = int(sum(
+            r.padded_steps for r in results))
+        summary["combine_bytes_per_round"] = int(np.mean(
+            [r.combine_bytes for r in results])) if results else 0
         if engine.cache_stats.get("per_shard"):
             summary["cache_per_shard"] = engine.cache_stats["per_shard"]
     if engine.control is not None:

@@ -25,7 +25,8 @@ from repro.optim import sgd
 
 def _engine(mesh=0, depth=1, cache=0, placement="lb", telemetry="synthetic",
             drift=0.0, adapt=0, sampler="uniform", affinity=False,
-            granularity="type", strategy=None, workers=4):
+            granularity="type", strategy=None, workers=4, bucket="round",
+            combine="flat", pool=None, steps_cap=4):
     ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
                                 batch_size=4, size_mu=2.5, size_sigma=0.8)
     params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
@@ -36,32 +37,99 @@ def _engine(mesh=0, depth=1, cache=0, placement="lb", telemetry="synthetic",
         dataset=ds, loss_fn=loss, init_params=params,
         optimizer=sgd(0.1, momentum=0.9),
         placement=make_placement(placement), sampler=samp,
-        pool=WorkerPool.homogeneous(workers, type_name="a40", concurrency=2),
+        pool=pool or WorkerPool.homogeneous(workers, type_name="a40",
+                                            concurrency=2),
         telemetry=SyntheticTelemetry(), strategy=strategy,
-        config=EngineConfig(steps_cap=4, batch_size=4, lanes_per_worker=2,
+        config=EngineConfig(steps_cap=steps_cap, batch_size=4,
+                            lanes_per_worker=2,
                             pipeline_depth=depth, mesh_workers=mesh,
                             device_cache_batches=cache,
                             cache_affinity=affinity,
+                            bucket_mode=bucket, combine_mode=combine,
                             telemetry_mode=telemetry,
                             drift_threshold=drift, adapt_interval=adapt,
                             adapt_granularity=granularity))
 
 
+def _hetero_pool():
+    """Two fast + two slow workers: LB placement hands the slow ones fewer
+    batches, so their lanes are genuinely shorter — the workload where
+    per-worker S buckets save padded steps."""
+    return WorkerPool.from_specs([("a40", 1.0, 2), ("a40", 1.0, 2),
+                                  ("2080ti", 0.35, 2), ("2080ti", 0.35, 2)])
+
+
 # -- the decomposition invariant ---------------------------------------------
 
 def test_losses_bit_identical_across_shard_counts_and_depths():
-    """Shard counts 1/2/4 x depths 0/1/2, controller live (drift detection
-    + per-worker slot climbing): losses, makespans and S are bit-identical.
-    Shard count 1 is the fused single-program path, so this also proves
-    fused == per-worker-programs + combine."""
+    """The acceptance matrix: bucket modes {round, worker} x shard counts
+    {1, 2, 4} x depths {0, 1, 2}, controller live (drift detection +
+    per-worker slot climbing): losses, makespans and S are bit-identical.
+    Shard count 1 is the fused single-program path (its one program has one
+    S, so bucket_mode does not apply); bucket_mode="worker" truncates short
+    workers' trailing masked steps, which the guarded fold makes bitwise
+    no-ops — this test is what enforces that."""
     kw = dict(drift=0.4, adapt=2, granularity="worker")
     base = _engine(mesh=0, depth=1, **kw).run(5)
-    for mesh, depth in [(2, 0), (2, 1), (2, 2), (4, 0), (4, 1), (4, 2)]:
-        res = _engine(mesh=mesh, depth=depth, **kw).run(5)
-        tag = f"mesh={mesh} depth={depth}"
-        assert [r.loss for r in res] == [r.loss for r in base], tag
-        assert [r.makespan for r in res] == [r.makespan for r in base], tag
-        assert [r.s_steps for r in res] == [r.s_steps for r in base], tag
+    for mesh in (2, 4):
+        for depth in (0, 1, 2):
+            for bucket in ("round", "worker"):
+                res = _engine(mesh=mesh, depth=depth, bucket=bucket,
+                              **kw).run(5)
+                tag = f"mesh={mesh} depth={depth} bucket={bucket}"
+                assert [r.loss for r in res] == [r.loss for r in base], tag
+                assert ([r.makespan for r in res]
+                        == [r.makespan for r in base]), tag
+                assert [r.s_steps for r in res] == [r.s_steps for r in base], tag
+
+
+def test_worker_buckets_cut_padded_steps_and_stay_bit_identical():
+    """bucket_mode="worker" on a heterogeneous pool: fewer dispatched-but-
+    masked steps than bucket_mode="round" (the padding the per-worker S
+    buckets exist to cut), with bit-identical losses, O(log S) worker-step
+    executables, and the compile cache still mostly hitting."""
+    kw = dict(mesh=2, depth=1, sampler="zipf", steps_cap=16)
+    rnd = _engine(pool=_hetero_pool(), bucket="round", **kw)
+    r_round = rnd.run(6)
+    wrk = _engine(pool=_hetero_pool(), bucket="worker", **kw)
+    r_worker = wrk.run(6)
+    assert [r.loss for r in r_worker] == [r.loss for r in r_round]
+    padded_round = sum(r.padded_steps for r in r_round)
+    padded_worker = sum(r.padded_steps for r in r_worker)
+    assert padded_worker < padded_round, (padded_worker, padded_round)
+    # O(log S) executables: bounded by the distinct S buckets seen, far
+    # below one-per-(worker x round) (4 workers x 6 rounds dispatches).
+    ws = wrk.compile_stats["worker_step"]
+    assert ws["compiles"] <= 8
+    assert ws["hits"] >= 6 * 4 - ws["compiles"]
+
+
+def test_tree_combine_hierarchy():
+    """combine_mode="tree" (§3.3's shard-local partial merge before the
+    cross-shard combine): losses match the flat combine to float tolerance
+    (the hierarchy re-associates the cross-lane mean — documented, not
+    hidden), are bit-identical across depths AND bucket modes at fixed K,
+    and the cross-shard transfer shrinks from O(K*lanes) to O(K)."""
+    flat = _engine(mesh=4, depth=1)
+    r_flat = flat.run(6)
+    tree = _engine(mesh=4, depth=1, combine="tree")
+    r_tree = tree.run(6)
+    fl = np.asarray([r.loss for r in r_flat])
+    tr = np.asarray([r.loss for r in r_tree])
+    assert np.allclose(fl, tr, rtol=1e-5), (fl, tr)
+    # scheduling-only changes keep the tree path bit-identical
+    r_d2 = _engine(mesh=4, depth=2, combine="tree").run(6)
+    assert [r.loss for r in r_d2] == [r.loss for r in r_tree]
+    r_wb = _engine(mesh=4, depth=1, combine="tree", bucket="worker").run(6)
+    assert [r.loss for r in r_wb] == [r.loss for r in r_tree]
+    # transfer: flat ships every lane partial (W x P = 8), tree one merged
+    # partial per live shard (4)
+    assert all(r.combine_bytes > 0 for r in r_flat + r_tree)
+    assert r_tree[-1].combine_bytes < r_flat[-1].combine_bytes
+    assert (r_flat[-1].combine_bytes
+            == 2 * r_tree[-1].combine_bytes)  # 8 lanes vs 4 shard partials
+    # the merge programs are counted like every other compiled step
+    assert tree.compile_stats["merge_step"]["compiles"] >= 1
 
 
 def test_mesh_cache_bit_identical_and_per_shard_accounting():
@@ -117,6 +185,18 @@ def test_engine_config_rejects_bad_mesh_knobs():
         EngineConfig(cache_affinity=True, mesh_workers=2)
     with pytest.raises(ValueError, match="adapt_granularity"):
         EngineConfig(adapt_granularity="lane")
+    with pytest.raises(ValueError, match="bucket_mode"):
+        EngineConfig(bucket_mode="lane", mesh_workers=2)
+    with pytest.raises(ValueError, match="mesh_workers >= 2"):
+        EngineConfig(bucket_mode="worker")        # fused path: no per-worker S
+    with pytest.raises(ValueError, match="mesh_workers >= 2"):
+        EngineConfig(bucket_mode="worker", mesh_workers=1)
+    with pytest.raises(ValueError, match="combine_mode"):
+        EngineConfig(combine_mode="ring", mesh_workers=2)
+    with pytest.raises(ValueError, match="mesh_workers >= 2"):
+        EngineConfig(combine_mode="tree")
+    # valid combinations construct fine
+    EngineConfig(mesh_workers=2, bucket_mode="worker", combine_mode="tree")
 
 
 # -- worker shard map --------------------------------------------------------
@@ -133,6 +213,22 @@ def test_worker_shard_map_stable_under_churn():
     assert m.device_for(0) is None            # no devices bound
     with pytest.raises(ValueError, match="n_shards"):
         WorkerShardMap.build(workers, 0)
+    # the combine-tree topology: shard -> live workers in dispatch order
+    assert m.live_shards() == {0, 1, 2}
+    assert m.merge_groups() == {0: [0], 1: [1], 2: [2, 5, 8]}
+    # a shard whose last worker left drops out of the tree
+    m3 = WorkerShardMap.build([w for w in workers if w.wid != 1], 3)
+    assert m3.live_shards() == {0, 2}
+    assert 1 not in m3.merge_groups()
+
+
+def test_fl_combine_topology_binds_merges_and_root():
+    from repro.launch.mesh import fl_combine_topology, fl_shard_devices
+
+    devs, root = fl_combine_topology(4)
+    assert len(devs) == 4
+    assert devs == fl_shard_devices(4)      # merges live on the shard leads
+    assert root == devs[0]                  # cross-shard combine at the root
 
 
 # -- cache-aware placement ---------------------------------------------------

@@ -24,6 +24,16 @@ def _record():
             "shards4": {"hit_rate": 0.4, "worker_step_compiles": 2,
                         "per_shard_sums_to_global": True},
         },
+        "hierarchy": {
+            "bucket_modes_identical": True,
+            "tree_combine_allclose": True,
+            "round": {"padded_steps": 700, "combine_bytes": 330000,
+                      "worker_step_compiles": 1},
+            "worker": {"padded_steps": 320, "combine_bytes": 330000,
+                       "worker_step_compiles": 3},
+            "tree": {"padded_steps": 320, "combine_bytes": 165000,
+                     "worker_step_compiles": 3},
+        },
     }
 
 
@@ -63,6 +73,21 @@ def test_each_regression_class_is_caught():
              "worker_step_compiles", 40)),
         ("mesh hit rate collapse",
          lambda r: r["mesh"]["shards2"].__setitem__("hit_rate", 0.1)),
+        ("bucket modes diverged",
+         lambda r: r["hierarchy"].__setitem__(
+             "bucket_modes_identical", False)),
+        ("tree combine drifted",
+         lambda r: r["hierarchy"].__setitem__(
+             "tree_combine_allclose", False)),
+        ("per-worker buckets stopped saving padding",
+         lambda r: r["hierarchy"]["worker"].__setitem__(
+             "padded_steps", 700)),
+        ("worker-bucket executable count blew up",
+         lambda r: r["hierarchy"]["worker"].__setitem__(
+             "worker_step_compiles", 40)),
+        ("tree combine stopped shrinking the transfer",
+         lambda r: r["hierarchy"]["tree"].__setitem__(
+             "combine_bytes", 330000)),
     ]
     for name, mutate in cases:
         fresh = copy.deepcopy(_record())
@@ -186,3 +211,88 @@ def test_control_missing_scenario_key_reports_once():
     failures = compare_control(_control_record(), fresh)
     assert [f for f in failures if "missing" in f]
     assert not [f for f in failures if "not detected" in f]
+
+
+# -- the trend gate (scheduled lane) ------------------------------------------
+
+def _trend(records):
+    return [{"stamp": f"d{i}", "benchmark": r.get("benchmark", "pipeline"),
+             "record": r} for i, r in enumerate(records)]
+
+
+def test_trend_too_short_passes_trivially():
+    from benchmarks.trend import compare_trend
+    failures, warnings = compare_trend(_trend([_record(), _record()]))
+    assert failures == [] and warnings == []
+
+
+def test_trend_steady_history_passes():
+    from benchmarks.trend import compare_trend
+    failures, warnings = compare_trend(
+        _trend([_record() for _ in range(6)]))
+    assert failures == [] and warnings == []
+
+
+def test_trend_single_breach_warns_sustained_breach_fails():
+    from benchmarks.trend import compare_trend
+    good = [_record() for _ in range(5)]
+    bad = copy.deepcopy(_record())
+    bad["engine"]["depth1"]["recompiles"] = 40
+    failures, warnings = compare_trend(_trend(good + [bad]))
+    assert failures == [] and warnings, "one bad nightly must only warn"
+    failures, warnings = compare_trend(
+        _trend(good + [bad, copy.deepcopy(bad)]))
+    assert failures, "two bad nightlies in a row must fail"
+
+
+def test_trend_band_metric_tolerates_noise_catches_blowup():
+    from benchmarks.trend import compare_trend
+    good = [_record() for _ in range(5)]
+    noisy = copy.deepcopy(_record())
+    noisy["pack"]["vectorized_pack_s_per_round"] = 1.2   # < 2x median 0.7
+    failures, _ = compare_trend(_trend(good + [noisy, noisy]))
+    assert failures == []
+    slow = copy.deepcopy(_record())
+    slow["pack"]["vectorized_pack_s_per_round"] = 5.0    # > 2x median
+    failures, _ = compare_trend(_trend(good + [slow, slow]))
+    assert [f for f in failures if "vectorized_pack_s_per_round" in f]
+
+
+def test_trend_missing_metric_in_newest_fails():
+    from benchmarks.trend import compare_trend
+    good = [_record() for _ in range(5)]
+    gutted = copy.deepcopy(_record())
+    del gutted["hierarchy"]
+    failures, _ = compare_trend(_trend(good + [gutted]))
+    assert [f for f in failures if "hierarchy" in f]
+
+
+def test_trend_kinds_are_gated_independently():
+    from benchmarks.trend import compare_trend
+    pipes = [_record() for _ in range(4)]
+    ctrls = [_control_record() for _ in range(4)]
+    bad = copy.deepcopy(_control_record())
+    bad["barrier"]["audit_violations"] = 2
+    entries = _trend(pipes) + _trend(ctrls + [bad, copy.deepcopy(bad)])
+    failures, _ = compare_trend(entries)
+    assert [f for f in failures if f.startswith("control:")]
+    assert not [f for f in failures if f.startswith("pipeline:")]
+
+
+def test_trend_cli_roundtrip(tmp_path):
+    trend = tmp_path / "trend.jsonl"
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(_record()))
+    for stamp in ("d1", "d2", "d3"):
+        assert main(["--append", str(trend), str(fresh),
+                     "--stamp", stamp]) == 0
+    assert main(["--trend", str(trend)]) == 0
+    bad = copy.deepcopy(_record())
+    bad["hierarchy"]["worker"]["padded_steps"] = 9000
+    fresh.write_text(json.dumps(bad))
+    assert main(["--append", str(trend), str(fresh), "--stamp", "d4"]) == 0
+    assert main(["--trend", str(trend)]) == 0      # first breach: warn only
+    assert main(["--append", str(trend), str(fresh), "--stamp", "d5"]) == 0
+    assert main(["--trend", str(trend)]) == 1      # sustained: fail
+    # the anchor-compare mode still needs exactly baseline+fresh
+    assert main([str(fresh)]) == 2

@@ -1,0 +1,271 @@
+"""Orphan-shard reclamation: a mesh shard whose last worker fails must not
+strand its slice of the device-cache row budget.
+
+Unit level: ``DeviceBatchCache.rebalance`` moves logical capacity to the
+survivors (dropping the dead shard's entries), hands it back on rejoin
+(evicting survivors back under budget), never double-books rows across a
+shrink/regrow cycle, and grows the physical pool arrays lazily on the
+consumer side.  Engine level: killing the last worker of a shard mid-run
+redistributes the pool, keeps per-shard accounting summing to the global
+stats, keeps cache affinity away from the dead shard, and restores the
+budget when a matching ``wid ≡ shard (mod K)`` rejoins.  Control plane:
+pending per-worker telemetry of a failed wid is discarded so its drift
+residual is not resurrected by a later barrier flush.
+"""
+
+import jax
+import numpy as np
+
+from repro.control.telemetry import MeasuredTelemetry
+from repro.core import (
+    EngineConfig,
+    FederatedEngine,
+    SyntheticTelemetry,
+    ZipfSampler,
+    make_placement,
+    s_bucket,
+)
+from repro.core.placement import Assignment, ClientInfo, WorkerInfo, apply_cache_affinity
+from repro.data import make_federated_dataset
+from repro.data.batching import build_round_arrays, gather_content_rows, plan_round
+from repro.data.device_cache import DeviceBatchCache
+from repro.distributed import FailureEvent, WorkerPool
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+
+
+def _ds():
+    return make_federated_dataset(
+        "sr", n_clients=32, input_dim=8, batch_size=2, size_mu=2.0, size_sigma=0.5
+    )
+
+
+def _plan(ds, cids, *, steps_cap=3):
+    clients = [
+        ClientInfo(cid=c, n_batches=ds.n_batches(c), n_samples=ds.n_samples(c)) for c in cids
+    ]
+    asg = Assignment(per_worker={0: clients})
+    return plan_round(asg, [WorkerInfo(wid=0)], steps_cap=steps_cap)
+
+
+def _shard_round(ds, cache, cids, t, *, shard):
+    """One cache-mediated single-worker round against one shard's pool."""
+    plan = _plan(ds, cids)
+    S = s_bucket(plan.s_real)
+    cplan = cache.plan(plan, S, t, shard=shard)
+    rows = gather_content_rows(ds, plan, cplan.content_mask, cplan.n_miss_rows, batch_size=2)
+    out = cache.apply({k: jax.device_put(v) for k, v in rows.items()}, cplan)
+    return out, cplan, plan
+
+
+# -- unit: the rebalance itself ------------------------------------------------
+
+
+def test_rebalance_moves_budget_and_drops_dead_entries():
+    ds = _ds()
+    cache = DeviceBatchCache(16, n_shards=2)
+    _shard_round(ds, cache, [0, 1], 0, shard=0)
+    _shard_round(ds, cache, [2, 3], 0, shard=1)
+    assert cache.shard_for_client(2) == 1
+    ev = cache.rebalance({0})
+    assert ev is not None
+    assert ev["capacities"] == [16, 0]
+    assert ev["rows_moved"] == 8
+    st = cache.stats()
+    assert [s["capacity_rows"] for s in st["per_shard"]] == [16, 0]
+    assert sum(s["capacity_rows"] for s in st["per_shard"]) == st["capacity_rows"]
+    # the dead shard's stranded entries are gone: nothing can hit them and
+    # affinity must not be steered toward them
+    assert st["per_shard"][1]["clients_cached"] == 0
+    assert cache.shard_for_client(2) is None
+    # survivors keep their entries
+    assert cache.shard_for_client(0) == 0
+    # unchanged topology is a no-op (no event spam for the control log)
+    assert cache.rebalance({0}) is None
+
+
+def test_rebalance_restore_evicts_survivors_back_under_budget():
+    ds = _ds()
+    cache = DeviceBatchCache(16, n_shards=2)
+    cache.rebalance({0})  # shard 1 dead: shard 0 owns the full 16 rows
+    out, _, plan = _shard_round(ds, cache, [0, 1, 2, 3], 1, shard=0)
+    grown = cache.stats()["per_shard"][0]
+    assert grown["rows_used"] > 8 or grown["clients_cached"] == 4
+    ev = cache.rebalance({0, 1})  # the matching wid rejoined
+    assert ev["capacities"] == [8, 8]
+    st = cache.stats()
+    assert st["per_shard"][0]["rows_used"] <= 8
+    assert st["per_shard"][0]["reclaim_evictions"] > 0
+    for key in ("hit_steps", "miss_steps", "insertions", "evictions", "reclaim_evictions"):
+        assert sum(s[key] for s in st["per_shard"]) == st[key], key
+
+
+def test_shrink_then_regrow_never_double_books_rows():
+    """A survivor shrunk while holding high row indices must not hand those
+    indices out again when the budget comes back."""
+    cache = DeviceBatchCache(8, n_shards=1)
+    sh = cache._shards[0]
+    ds = _ds()
+    plan = _plan(ds, [0], steps_cap=4)
+    S = s_bucket(plan.s_real)
+    cache.plan(plan, S, 0)
+    nb_a = sh.rows_used()  # client 0's rows sit at the low indices
+    cache.plan(_plan(ds, [1], steps_cap=4), S, 0)
+    assert len(sh.entries) == 2
+    # shrink so the older entry is evicted while the survivor keeps its
+    # original (higher) row indices
+    cache._resize_shard(sh, sh.rows_used() - nb_a)
+    held = {int(r) for e in sh.entries.values() for r in e.rows}
+    assert held and min(held) >= nb_a
+    assert set(sh.free).isdisjoint(held)
+    # regrow to the full budget: freshly freed indices must exclude the
+    # survivor's held rows — handing them out again would double-book
+    cache._resize_shard(sh, 8)
+    assert set(sh.free).isdisjoint(held)
+    assert len(sh.free) + sh.rows_used() == 8
+    cache.plan(_plan(ds, [2], steps_cap=4), S, 1)
+    rows_all = sorted(int(r) for e in sh.entries.values() for r in e.rows)
+    assert len(rows_all) == len(set(rows_all)), rows_all
+
+
+def test_apply_grows_physical_pool_after_reclaim():
+    """Reclaimed budget can exceed a shard's originally allocated device
+    arrays: apply() grows them from the plan-time snapshot and the grown
+    pool still serves bit-exact content."""
+    ds = _ds()
+    cache = DeviceBatchCache(16, n_shards=2)
+    out, _, _ = _shard_round(ds, cache, [0, 1], 0, shard=0)  # pools allocated at 8 rows
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    assert cache._shards[0].pool_rows == 8
+    cache.rebalance({0})
+    _shard_round(ds, cache, [2, 3, 4, 5], 1, shard=0)
+    assert cache._shards[0].pool_rows == 16
+    # a pure-hit replay of a client inserted after the growth matches the
+    # host pack bit-exactly (content went through the grown pool)
+    out, cplan, plan = _shard_round(ds, cache, [2, 3, 4, 5], 2, shard=0)
+    assert cplan.hit_steps > 0 and cplan.miss_steps == 0
+    ref = build_round_arrays(ds, plan=plan, batch_size=2, s_align=s_bucket)
+    mask = ref.step_mask.astype(bool)
+    for name in ref.batches:
+        np.testing.assert_array_equal(np.asarray(out[name])[mask], ref.batches[name][mask])
+
+
+def test_affinity_treats_dead_shard_homes_as_uncached():
+    cs = [ClientInfo(cid=i, n_batches=4) for i in range(4)]
+    workers = [WorkerInfo(wid=0, type_name="a40"), WorkerInfo(wid=1, type_name="a40")]
+    asg = Assignment(per_worker={0: [cs[0], cs[2]], 1: [cs[1], cs[3]]})
+    shard_of_wid = {0: 0, 1: 1}
+    cached = {1: 0}.get  # client 1's rows live on shard 0
+    _, n_live = apply_cache_affinity(asg, workers, shard_of_wid, cached, live_shards={0, 1})
+    assert n_live == 1
+    # shard 0 lost its last worker: the home is stranded, no swap happens
+    out, n_dead = apply_cache_affinity(asg, workers, shard_of_wid, cached, live_shards={1})
+    assert n_dead == 0
+    assert out.per_worker == asg.per_worker
+
+
+def test_telemetry_discards_dead_workers_pending_meta():
+    mt = MeasuredTelemetry(policy="reuse")
+    mt.record_worker_times(
+        0,
+        [(0, "a40", [4.0], 1.0, 1.1), (1, "a40", [4.0], 1.0, 9.9)],
+        exec_s=2.0,
+        n_steps=8,
+    )
+    dropped = mt.discard_workers([1])
+    assert dropped == 1
+    assert mt.stats()["worker_rows_discarded"] == 1
+    out = mt.flush(2)
+    assert [w[1] for w in out.worker_meta] == [0]
+    # typed per-client rows survive — the measurements were real
+    assert len(out.rows) == 2
+
+
+# -- engine level --------------------------------------------------------------
+
+
+def _engine(pool, *, affinity=False, telemetry="synthetic", drift=0.0):
+    ds = make_federated_dataset(
+        "sr", n_clients=64, input_dim=16, batch_size=4, size_mu=2.5, size_sigma=0.8
+    )
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16, width=32, n_blocks=2)
+    return FederatedEngine(
+        dataset=ds,
+        loss_fn=loss,
+        init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement("lb"),
+        sampler=ZipfSampler(64, 8, a=1.2),
+        pool=pool,
+        telemetry=SyntheticTelemetry(),
+        config=EngineConfig(
+            steps_cap=4,
+            batch_size=4,
+            lanes_per_worker=2,
+            pipeline_depth=1,
+            mesh_workers=2,
+            device_cache_batches=64,
+            cache_affinity=affinity,
+            telemetry_mode=telemetry,
+            drift_threshold=drift,
+        ),
+    )
+
+
+def test_kill_last_worker_of_shard_reclaims_and_restores():
+    """The satellite scenario: shard 1 (wids 1, 3) loses both workers mid-
+    run — its 32 stranded rows move to shard 0; per-shard stats keep
+    summing to the global; a rejoining wid ≡ 1 (mod 2) gets the capacity
+    back; affinity never routes to the dead shard during the gap."""
+    pool = WorkerPool.homogeneous(4, type_name="a40", concurrency=2)
+    pool.schedule(FailureEvent(round_idx=3, kind="fail", wid=1))
+    pool.schedule(FailureEvent(round_idx=3, kind="fail", wid=3))
+    pool.schedule(FailureEvent(round_idx=7, kind="join", wid=5, type_name="a40", concurrency=2))
+    eng = _engine(pool, affinity=True, telemetry="measured", drift=0.4)
+    eng.run(3)
+    st = eng.cache_stats
+    assert [s["capacity_rows"] for s in st["per_shard"]] == [32, 32]
+    eng.run(3)  # the gap: shard 1 has no workers
+    st = eng.cache_stats
+    assert [s["capacity_rows"] for s in st["per_shard"]] == [64, 0]
+    assert st["rebalances"] == 1 and st["rows_moved"] == 32
+    assert st["per_shard"][1]["clients_cached"] == 0
+    # nothing routed to the dead shard during the gap: its pool saw no
+    # traffic (counters frozen at their pre-churn values is too strict —
+    # the last pre-churn round may still book; zero NEW entries is exact)
+    dead_before = st["per_shard"][1]
+    eng.run(1)  # round 6: still in the gap
+    assert eng.cache_stats["per_shard"][1]["clients_cached"] == 0
+    assert eng.cache_stats["per_shard"][1]["hit_steps"] == dead_before["hit_steps"]
+    eng.run(2)  # wid 5 joins at round 7 -> 5 % 2 == 1 revives shard 1
+    st = eng.cache_stats
+    assert [s["capacity_rows"] for s in st["per_shard"]] == [32, 32]
+    assert st["rebalances"] == 2
+    for key in ("hit_steps", "miss_steps", "insertions", "evictions", "reclaim_evictions"):
+        assert sum(s[key] for s in st["per_shard"]) == st[key], key
+    # shard 1 serves again after the rejoin
+    eng.run(2)
+    assert eng.cache_stats["per_shard"][1]["miss_steps"] > st["per_shard"][1]["miss_steps"]
+    # control plane: rebalances journaled; barrier audit clean; the dead
+    # wids' residuals are gone and stay gone (pending meta was discarded)
+    cst = eng.control.stats()
+    assert cst["cache_rebalances"] == 2
+    assert cst["audit_violations"] == 0
+    assert 1 not in cst.get("worker_residuals", {})
+    assert 3 not in cst.get("worker_residuals", {})
+    assert all(np.isfinite(r.loss) for r in eng.history)
+
+
+def test_reclaimed_run_matches_unchurned_losses_until_the_event():
+    """Reclamation is a cache-bookkeeping change only: losses before the
+    churn round are bit-identical to an unchurned run (the cache is value-
+    transparent, so the rebalance may never leak into training math)."""
+    quiet = _engine(WorkerPool.homogeneous(4, type_name="a40", concurrency=2))
+    r_quiet = quiet.run(3)
+    pool = WorkerPool.homogeneous(4, type_name="a40", concurrency=2)
+    pool.schedule(FailureEvent(round_idx=3, kind="fail", wid=1))
+    pool.schedule(FailureEvent(round_idx=3, kind="fail", wid=3))
+    churn = _engine(pool)
+    r_churn = churn.run(6)
+    assert [r.loss for r in r_churn[:3]] == [r.loss for r in r_quiet]
+    assert all(np.isfinite(r.loss) for r in r_churn)

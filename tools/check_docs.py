@@ -1,6 +1,6 @@
 """Docs consistency checks (run by the CI lint job and tier-1 tests).
 
-Two checks, both zero-dependency beyond the repo itself:
+Three checks, all zero-dependency beyond the repo itself:
 
 1. **Markdown link check** — every relative link in the repo's markdown
    files must resolve to an existing file (anchors are stripped; http(s)
@@ -9,6 +9,10 @@ Two checks, both zero-dependency beyond the repo itself:
    ``<!-- flags:begin -->`` / ``<!-- flags:end -->`` must equal the output
    of ``python -m repro.launch.train --print-flags-md`` exactly.  The
    table is generated, never hand-edited, so CLI and docs cannot drift.
+3. **Architecture coverage** — ``docs/ARCHITECTURE.md`` must keep naming
+   the subsystems and invariants it exists to explain (the needle list
+   below); a rename or removed section must update the doc, not orphan
+   it.  ``tests/test_docs.py`` asserts the same list in tier-1.
 
 Usage::
 
@@ -26,6 +30,26 @@ MD_FILES = sorted(
     list(REPO.glob("*.md")) + list((REPO / "docs").glob("*.md")))
 LINK_RX = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 BEGIN, END = "<!-- flags:begin -->", "<!-- flags:end -->"
+
+# What docs/ARCHITECTURE.md must keep covering (case-insensitive): the
+# machine's moving parts and the invariants the test suite enforces.
+ARCHITECTURE_NEEDLES = (
+    "PRODUCER", "CONSUMER", "PackBuffers", "refit barrier",
+    "DriftDetector", "DeviceBatchCache", "WorkerShardMap", "mesh_workers",
+    "which module owns which invariant", "bit-identical",
+    # the hierarchical-mesh layer (per-worker S buckets, shard-local
+    # combine trees, orphan-shard reclamation)
+    "Hierarchical combine", "bucket_mode", "combine_mode",
+    "make_shard_merge_step", "Orphan-shard reclamation", "rebalance",
+    "live_shards", "discard_workers", "combine_bytes",
+)
+
+
+def check_architecture_coverage() -> list[str]:
+    doc = (REPO / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
+    low = doc.lower()
+    return [f"docs/ARCHITECTURE.md: no longer mentions {needle!r}"
+            for needle in ARCHITECTURE_NEEDLES if needle.lower() not in low]
 
 
 def check_links() -> list[str]:
@@ -61,7 +85,8 @@ def check_flags_section() -> list[str]:
 
 
 def main() -> int:
-    errors = check_links() + check_flags_section()
+    errors = (check_links() + check_flags_section()
+              + check_architecture_coverage())
     for e in errors:
         print(f"FAIL {e}")
     if not errors:
