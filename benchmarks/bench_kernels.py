@@ -6,7 +6,16 @@ the kernel body in Python), so this benchmark reports the *structural* win:
 bytes that must cross HBM per call for the fused kernel vs the unfused XLA
 lowering — the quantity the §Perf memory term is made of — plus a
 correctness check per shape.
+
+Also writes a machine-readable JSON record (default ``BENCH_kernels.json``
+at the repo root, override with ``POLLEN_BENCH_KERNELS_OUT``) for the
+nightly trend lane: ``benchmarks.trend`` gates the dequant-merge and
+fedavg-accum correctness/saving metrics against the trailing-window
+median, so a kernel numerics regression shows up as a trend breach.
 """
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +29,15 @@ def _traffic_fedavg(n_elems, dtype_bytes):
     return fused, unfused
 
 
+def _traffic_dequant_merge(n_elems):
+    # fused: read acc f32 + q int8 + g f32, write out f32 — one pass
+    fused = n_elems * (4 + 1 + 4 + 4)
+    # unfused: dequant (read q + g, write theta f32) then Eq. 1 merge
+    # (read acc + theta, write out) — theta round-trips through HBM
+    unfused = n_elems * (1 + 4 + 4) + n_elems * (4 + 4 + 4)
+    return fused, unfused
+
+
 def _traffic_attention(b, s, hq, hkv, d, dtype_bytes):
     io = (b * s * hq * d + 2 * b * s * hkv * d + b * s * hq * d) * dtype_bytes
     fused = io                                    # probs never leave VMEM
@@ -29,6 +47,7 @@ def _traffic_attention(b, s, hq, hkv, d, dtype_bytes):
 
 def run() -> list[str]:
     rows = ["bench_kernels,kernel,shape,max_err,fused_MB,unfused_MB,saving"]
+    record: dict = {"benchmark": "kernels"}
     k = jax.random.key(0)
     # fedavg_accum
     for n in (1 << 16, 1 << 20):
@@ -40,6 +59,20 @@ def run() -> list[str]:
         f, u = _traffic_fedavg(n, 2)
         rows.append(f"bench_kernels,fedavg_accum,{n},{err:.2e},"
                     f"{f / 1e6:.2f},{u / 1e6:.2f},{u / f:.2f}x")
+    record["fedavg_accum"] = {"max_err": err, "saving_x": round(u / f, 2)}
+    # dequant_merge (the compressed combine's fused root-side fold)
+    for n in (1 << 16, 1 << 20):
+        a = jax.random.normal(k, (n,))
+        g = jax.random.normal(jax.random.fold_in(k, 4), (n,))
+        q = jax.random.randint(jax.random.fold_in(k, 5), (n,), -128, 128,
+                               jnp.int8)
+        err = float(jnp.abs(
+            ops.dequant_merge(a, q, g, 0.013, 5.0, 2.0)
+            - ref.dequant_merge_ref(a, q, g, 0.013, 5.0, 2.0)).max())
+        f, u = _traffic_dequant_merge(n)
+        rows.append(f"bench_kernels,dequant_merge,{n},{err:.2e},"
+                    f"{f / 1e6:.2f},{u / 1e6:.2f},{u / f:.2f}x")
+    record["dequant_merge"] = {"max_err": err, "saving_x": round(u / f, 2)}
     # flash attention
     for (b, s, hq, hkv, d) in [(1, 256, 4, 2, 64), (1, 512, 8, 2, 64)]:
         q = jax.random.normal(k, (b, s, hq, d))
@@ -80,4 +113,10 @@ def run() -> list[str]:
     nb = x.size * 4
     rows.append(f"bench_kernels,rmsnorm,512x1024,{err:.2e},"
                 f"{2 * nb / 1e6:.2f},{3 * nb / 1e6:.2f},1.50x")
+    out_path = os.environ.get(
+        "POLLEN_BENCH_KERNELS_OUT",
+        os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json"))
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+        f.write("\n")
     return rows

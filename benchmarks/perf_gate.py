@@ -190,6 +190,24 @@ def compare(
             f"combine's {cb_flat}B — the shard-local merge shrinks nothing",
         )
 
+    # -- machine-independent: compressed cross-shard combine -------------------
+    for tag, floor in (("int8", 3.5), ("topk", 10.0)):
+        ratio = require(f"hierarchy.{tag}.compression_ratio_vs_flat")
+        if ratio is not None:
+            check(
+                ratio >= floor,
+                f"hierarchy: {tag} combine only {ratio:.2f}x smaller than the "
+                f"flat combine (floor {floor}x)",
+            )
+        dev = require(f"hierarchy.{tag}.final_loss_rel_dev_vs_tree")
+        if dev is not None:
+            check(
+                dev < 0.25,
+                f"hierarchy: {tag} final loss ends {dev:.3f} worse than the "
+                f"exact tree run (documented degradation tolerance 0.25; "
+                f"negative = converged lower)",
+            )
+
     # -- cross-run timing band ----------------------------------------------
     pack_s = require("pack.vectorized_pack_s_per_round")
     base_s = _get(baseline, "pack.vectorized_pack_s_per_round")

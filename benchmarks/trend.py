@@ -48,6 +48,19 @@ TREND_METRICS: dict = {
         ("hierarchy.worker.worker_step_compiles", "count", 0),
         ("hierarchy.worker.padded_steps", "count", 0),
         ("hierarchy.tree.combine_bytes", "count", 0),
+        ("hierarchy.int8.combine_bytes", "count", 0),
+        ("hierarchy.topk.combine_bytes", "count", 0),
+        ("hierarchy.int8.compression_ratio_vs_flat", "floor", 0.1),
+        ("hierarchy.topk.compression_ratio_vs_flat", "floor", 0.5),
+    ],
+    "kernels": [
+        # correctness deltas are deterministic on a given backend; the
+        # count-mode tolerance absorbs float noise while still tripping on
+        # a real numerics regression (errors are ~1e-7 when healthy)
+        ("dequant_merge.max_err", "count", 1e-4),
+        ("dequant_merge.saving_x", "floor", 0.05),
+        ("fedavg_accum.max_err", "count", 1e-2),  # bf16 inputs
+        ("fedavg_accum.saving_x", "floor", 0.05),
     ],
     "control": [
         ("refit.full_refit_ms", "band", 2.0),

@@ -83,11 +83,19 @@ class CheckpointStore:
         os.replace(tmp, self.manifest_path)
 
     # -- save/restore ----------------------------------------------------------
-    def save(self, round_idx: int, params, *, extra: dict | None = None) -> str:
-        """Snapshot params + JSON-serializable extra state for a round."""
+    def save(self, round_idx: int, params, *, extra: dict | None = None,
+             aux=None) -> str:
+        """Snapshot params + JSON-serializable extra state for a round.
+
+        ``aux`` is an optional pytree of arrays saved as a sibling
+        ``.aux.npz`` (array state that is not the model — e.g. the
+        compressed combine's error-feedback residuals).  Restored via
+        :meth:`restore_aux`; absent for checkpoints that never had one."""
         name = f"round_{round_idx:08d}"
         pt_path = os.path.join(self.dir, name + ".npz")
         save_pytree(pt_path, params)
+        if aux is not None:
+            save_pytree(os.path.join(self.dir, name + ".aux.npz"), aux)
         meta = {"round": int(round_idx), "params": os.path.basename(pt_path),
                 "extra": extra or {}}
         meta_path = os.path.join(self.dir, name + ".json")
@@ -102,7 +110,7 @@ class CheckpointStore:
         # keep-k garbage collection
         while len(m["checkpoints"]) > self.keep:
             old = m["checkpoints"].pop(0)
-            for suffix in (".npz", ".json"):
+            for suffix in (".npz", ".json", ".aux.npz"):
                 p = os.path.join(self.dir, old["name"] + suffix)
                 if os.path.exists(p):
                     os.unlink(p)
@@ -130,3 +138,21 @@ class CheckpointStore:
             meta = json.load(f)
         params = load_pytree(os.path.join(self.dir, name + ".npz"), like_params)
         return params, meta["round"], meta.get("extra", {})
+
+    def restore_aux(self, like, *, round_idx: int | None = None):
+        """Load the ``.aux.npz`` sidecar for the requested/latest checkpoint
+        into the structure of ``like``; None if that checkpoint has none."""
+        cs = self._read_manifest()["checkpoints"]
+        if not cs:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        if round_idx is None:
+            entry = cs[-1]
+        else:
+            matches = [c for c in cs if c["round"] == round_idx]
+            if not matches:
+                raise FileNotFoundError(f"no checkpoint for round {round_idx}")
+            entry = matches[0]
+        path = os.path.join(self.dir, entry["name"] + ".aux.npz")
+        if not os.path.exists(path):
+            return None
+        return load_pytree(path, like)

@@ -9,11 +9,36 @@ standard compressors shrink it:
 * symmetric per-tensor int8 quantization.
 
 Both are pure pytree transforms usable inside or outside jit.
+:mod:`repro.compress.combine` wires them into the engine's compressed
+cross-shard combine (``EngineConfig.combine_compress``): per-shard delta
+encoding against the global model, consumer-owned error-feedback residuals
+in strict round order, and the wire-format byte accounting behind
+``RoundResult.combine_bytes``.
 """
 
-from repro.compress.topk import (TopKState, topk_compress, topk_decompress,
-                                 topk_init)
+from repro.compress.combine import (
+    CombineCompressor,
+    make_encode_step,
+    payload_nbytes,
+)
 from repro.compress.quant import int8_dequantize, int8_quantize
+from repro.compress.topk import (
+    TopKState,
+    topk_compress,
+    topk_decompress,
+    topk_init,
+    topk_k,
+)
 
-__all__ = ["TopKState", "topk_init", "topk_compress", "topk_decompress",
-           "int8_quantize", "int8_dequantize"]
+__all__ = [
+    "TopKState",
+    "topk_init",
+    "topk_compress",
+    "topk_decompress",
+    "topk_k",
+    "int8_quantize",
+    "int8_dequantize",
+    "CombineCompressor",
+    "make_encode_step",
+    "payload_nbytes",
+]

@@ -1,0 +1,169 @@
+"""Compressed cross-shard combine: the wire format and its residual state.
+
+With ``EngineConfig.combine_compress != "none"`` each mesh shard's merged
+partial aggregate is compressed before it crosses to the combine root.
+What travels is never the partial itself but its DELTA from the current
+global model (``theta_s - g``): the delta is small and centered, so int8
+scales stay tight and top-k mass concentrates — compressing raw parameters
+would destroy them.  The root reconstructs ``g + dequant(payload)`` inside
+the combine program, so Eq. 1's weighted mean over shards is preserved up
+to quantization error.
+
+Error feedback (Stich-style, carried in :class:`~repro.compress.topk
+.TopKState`-shaped residual trees): per shard ``s`` and round ``t``,
+
+    u_t   = (theta_s - g) + e_{t-1}
+    sent  = C(u_t)                      # int8 round or top-k selection
+    e_t   = u_t - dequant(sent)
+
+so quantization error is never dropped, only delayed — the residual
+re-enters the next round's selection and long-run convergence holds.
+
+Ownership: residuals live in one :class:`CombineCompressor` per engine and
+mutate at exactly one site, the consumer's ``_execute_mesh`` — which runs
+rounds strictly sequentially, so residual state rides round order the same
+way ``params`` does, at any pipeline depth.  They are checkpointed (a
+params-shaped f32 tree per shard) so a restore does not silently drop
+accumulated error.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.quant import int8_quantize
+from repro.compress.topk import TopKState, topk_compress, topk_k
+
+__all__ = ["CombineCompressor", "make_encode_step", "payload_nbytes"]
+
+MODES = ("none", "int8", "topk")
+
+
+def payload_nbytes(like_params, mode: str, frac: float) -> int:
+    """Wire bytes of ONE shard's compressed partial: per-leaf payload plus
+    the (exact, uncompressed) weight and loss scalars — the compressed
+    analogue of the engine's dense ``_partial_bytes``.
+
+    * int8: 1 byte/elem + one f32 scale per leaf;
+    * topk: k(leaf) × (4B idx + 4B val) per leaf.
+    """
+    leaves = jax.tree.leaves(like_params)
+    if mode == "int8":
+        body = sum(int(np.prod(np.shape(x))) + 4 for x in leaves)
+    elif mode == "topk":
+        body = sum(topk_k(int(np.prod(np.shape(x))), frac) * 8 for x in leaves)
+    else:
+        raise ValueError(f"no payload for mode {mode!r}")
+    return body + 8  # weight + loss f32 scalars
+
+
+def make_encode_step(mode: str, frac: float):
+    """Build the jittable per-shard encoder:
+
+    ``encode(global_params, theta, residual) -> (payload, new_residual)``
+
+    ``theta`` is the shard's merged partial (params-shaped), ``residual``
+    the shard's carried error (params-shaped f32).  The payload is a pytree
+    of device arrays — ``(int8 tree, scales tree)`` or a tree of
+    ``(idx, vals)`` per leaf — stackable across shards for the combine."""
+    if mode == "int8":
+
+        def encode(global_params, theta, residual):
+            u = jax.tree.map(
+                lambda t, g, e: t.astype(jnp.float32) - g.astype(jnp.float32) + e,
+                theta,
+                global_params,
+                residual,
+            )
+            q, scales = int8_quantize(u)
+            new_res = jax.tree.map(
+                lambda uu, qq, s: uu - qq.astype(jnp.float32) * s, u, q, scales
+            )
+            return (q, scales), new_res
+
+        return encode
+    if mode == "topk":
+
+        def encode(global_params, theta, residual):
+            delta = jax.tree.map(
+                lambda t, g: t.astype(jnp.float32) - g.astype(jnp.float32),
+                theta,
+                global_params,
+            )
+            payload, state = topk_compress(delta, TopKState(residual), frac=frac)
+            return payload, state.error
+
+        return encode
+    raise ValueError(f"no encode step for mode {mode!r}")
+
+
+class CombineCompressor:
+    """Owns the per-shard error-feedback residuals of the compressed
+    cross-shard combine (consumer-side state, strict round order — see the
+    module docstring) plus the static wire-format byte accounting."""
+
+    def __init__(self, mode: str, like_params, *, topk_frac: float = 0.05):
+        if mode not in ("int8", "topk"):
+            raise ValueError(f"combine_compress mode must be int8|topk, got {mode!r}")
+        self.mode = mode
+        self.frac = float(topk_frac)
+        self._like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(np.shape(x), jnp.float32), like_params
+        )
+        self.payload_bytes = payload_nbytes(like_params, mode, self.frac)
+        self._residuals: dict[int, object] = {}
+
+    # -- residual state (round-ordered: one mutation site in _execute_mesh) --
+    def _zeros(self):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), self._like)
+
+    def residual(self, shard: int):
+        """The shard's carried error tree (zeros on first sight)."""
+        r = self._residuals.get(shard)
+        return self._zeros() if r is None else r
+
+    def commit(self, updates: dict):
+        """Adopt this round's new residuals — called once per round, after
+        the combine program is dispatched, so a failed round never leaves a
+        half-updated residual set behind."""
+        self._residuals.update(updates)
+
+    def reset(self) -> None:
+        self._residuals.clear()
+
+    def residual_norm(self) -> float:
+        """Global L2 norm over every shard's residual (observability: the
+        error-feedback mass still waiting to be sent)."""
+        total = 0.0
+        for tree in self._residuals.values():
+            for leaf in jax.tree.leaves(tree):
+                total += float(jnp.sum(jnp.square(leaf)))
+        return float(np.sqrt(total))
+
+    # -- checkpointing -------------------------------------------------------
+    def state_meta(self) -> dict:
+        """JSON-safe descriptor (the arrays ride the checkpoint's aux npz)."""
+        return {
+            "mode": self.mode,
+            "frac": self.frac,
+            "shards": sorted(int(s) for s in self._residuals),
+        }
+
+    def state_aux(self):
+        """The residual trees as one pytree keyed by shard id (or None when
+        no shard has compressed yet)."""
+        if not self._residuals:
+            return None
+        return {f"s{int(s)}": self._residuals[s] for s in sorted(self._residuals)}
+
+    def aux_like(self, shards) -> dict:
+        """Structure template for :meth:`state_aux` of the given shard ids —
+        what a checkpoint restore needs to load the npz back."""
+        return {f"s{int(s)}": self._zeros() for s in shards}
+
+    def load_state(self, aux: dict) -> None:
+        self._residuals = {
+            int(key[1:]): jax.tree.map(jnp.asarray, tree) for key, tree in aux.items()
+        }

@@ -14,14 +14,12 @@ def int8_quantize(tree):
     def q(x):
         xf = x.astype(jnp.float32)
         scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
-        return jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8), \
-            scale
+        qx = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return qx, scale
 
     pairs = jax.tree.map(q, tree)
-    qs = jax.tree.map(lambda p: p[0], pairs,
-                      is_leaf=lambda v: isinstance(v, tuple))
-    scales = jax.tree.map(lambda p: p[1], pairs,
-                          is_leaf=lambda v: isinstance(v, tuple))
+    qs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda v: isinstance(v, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda v: isinstance(v, tuple))
     return qs, scales
 
 

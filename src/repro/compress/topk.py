@@ -4,6 +4,13 @@ compress: given an update tree and the carried error state, send only the
 largest-|v| fraction per leaf; the unsent remainder accumulates in the error
 state and is added before the next round's selection — so nothing is lost,
 only delayed.
+
+``frac`` is a STATIC python float, never a traced value: the per-leaf ``k``
+it induces is a *shape* (the payload's ``(idx, vals)`` length), and shapes
+must be known at trace time.  ``topk_k`` does the size math in exact python
+integer arithmetic — ``int(size * frac)`` would inherit float rounding
+(``int(100 * 0.29) == 28``), making the wire format depend on the platform's
+float printing instead of on ``(size, frac)``.
 """
 
 from __future__ import annotations
@@ -13,21 +20,44 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["TopKState", "topk_init", "topk_compress", "topk_decompress"]
+__all__ = ["TopKState", "topk_init", "topk_compress", "topk_decompress", "topk_k"]
 
 
 class TopKState(NamedTuple):
-    error: Any       # pytree of residuals (same structure as updates)
+    error: Any  # pytree of residuals (same structure as updates)
 
 
 def topk_init(like_tree) -> TopKState:
     return TopKState(error=jax.tree.map(jnp.zeros_like, like_tree))
 
 
+def _check_frac(frac) -> float:
+    """Validate the static sparsification fraction: a python float in (0, 1]."""
+    if not isinstance(frac, (int, float)):
+        raise TypeError(
+            "topk frac must be a static python float (it determines payload "
+            f"shapes); got {type(frac).__name__} — pass it as a static argument"
+        )
+    frac = float(frac)
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"topk frac must be in (0, 1], got {frac!r}")
+    return frac
+
+
+def topk_k(size: int, frac: float) -> int:
+    """Per-leaf k for a leaf of ``size`` elements: at least 1, at most
+    ``size``, computed in integer arithmetic (round-half-up on the exact
+    rational ``size * frac``) so equal ``(size, frac)`` always yield equal
+    payload shapes."""
+    num, den = float(frac).as_integer_ratio()
+    k = (size * num + den // 2) // den
+    return max(1, min(size, int(k)))
+
+
 def _compress_leaf(u, e, frac):
     v = u.astype(jnp.float32) + e.astype(jnp.float32)
     flat = v.reshape(-1)
-    k = max(1, int(flat.size * frac))
+    k = topk_k(flat.size, frac)  # static: flat.size and frac are python values
     _, idx = jax.lax.top_k(jnp.abs(flat), k)
     vals = flat[idx]
     sent = jnp.zeros_like(flat).at[idx].set(vals)
@@ -40,6 +70,7 @@ def topk_compress(updates, state: TopKState, *, frac: float = 0.01):
 
     Payload size ≈ frac × (4B idx + 4B val)/elem vs 2-4B/elem dense —
     e.g. frac=0.01 → ~64x smaller upload."""
+    frac = _check_frac(frac)
     flat_u, tdef = jax.tree_util.tree_flatten(updates)
     flat_e = tdef.flatten_up_to(state.error)
     payload, new_err = [], []
@@ -47,14 +78,14 @@ def topk_compress(updates, state: TopKState, *, frac: float = 0.01):
         p, ne = _compress_leaf(u, e, frac)
         payload.append(p)
         new_err.append(ne)
-    return (tdef.unflatten(payload),
-            TopKState(error=tdef.unflatten(new_err)))
+    return (tdef.unflatten(payload), TopKState(error=tdef.unflatten(new_err)))
 
 
 def topk_decompress(payload, like_tree):
     """Rebuild dense updates from (idx, vals) payloads."""
     flat_p, tdef = jax.tree_util.tree_flatten(
-        payload, is_leaf=lambda x: isinstance(x, tuple))
+        payload, is_leaf=lambda x: isinstance(x, tuple)
+    )
     flat_like = tdef.flatten_up_to(like_tree)
     out = []
     for (idx, vals), like in zip(flat_p, flat_like):

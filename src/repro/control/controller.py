@@ -143,6 +143,10 @@ class ControlPlane:
         # flushes after the pool event (cleared when the wid rejoins).
         self._dead_wids: set = set()
         self.cache_rebalances = 0  # orphan-shard pool reclaims observed
+        # Compressed-combine journal (consumer-owned, separate from
+        # self.log: the producer appends to self.log in round order and a
+        # consumer-side append would interleave across threads).
+        self.compress_log: list = []  # (round, bytes_sent, residual_norm)
         if self.autoconc is not None and pool is not None:
             # Seed each knob at its current (estimated) slot count — the
             # engine's pool carries the Table-3 / analytic-estimate values.
@@ -320,6 +324,17 @@ class ControlPlane:
         else:
             self.measured.record(t, exec_s, shares, n_steps)
 
+    def on_combine_compressed(
+        self, t: int, *, bytes_sent: int, residual_norm: float
+    ) -> None:
+        """Consumer hook (mesh path, ``combine_compress != "none"``): journal
+        round ``t``'s compressed cross-shard combine — the bytes that
+        actually crossed the shard→root boundary and the L2 norm of the
+        error-feedback residual set after the round.  A growing residual
+        norm is the early-warning signal that the compressor is too
+        aggressive for the current update distribution."""
+        self.compress_log.append((t, int(bytes_sent), float(residual_norm)))
+
     # -- lifecycle -----------------------------------------------------------
     def begin_run(self, first_round: int) -> None:
         if self.measured is not None:
@@ -362,6 +377,12 @@ class ControlPlane:
             out["audit_violations"] = len(self.audit())
         if self.drift is not None:
             out["drift"] = self.drift.stats()
+        if self.compress_log:
+            out["combine_compress"] = {
+                "rounds": len(self.compress_log),
+                "bytes_sent": int(sum(b for _, b, _ in self.compress_log)),
+                "last_residual_norm": float(self.compress_log[-1][2]),
+            }
         if self.worker_residuals:
             out["worker_residuals"] = {
                 int(w): float(e) for w, e in sorted(self.worker_residuals.items())

@@ -125,6 +125,7 @@ from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
 from repro.data.device_cache import CachePlan, DeviceBatchCache
 from repro.distributed.sharding import WorkerShardMap
 from repro.fl.round import (StepCompileCache, make_combine_step,
+                            make_compressed_combine_step,
                             make_gather_round_step, make_round_step,
                             make_shard_merge_step, make_worker_round_step)
 from repro.fl.strategy import FedAvg, Strategy
@@ -144,6 +145,17 @@ def s_bucket(s: int, *, base: int = 8) -> int:
             if s <= cand:
                 return cand
         b *= 2
+
+
+def _cat_parts(outs, i):
+    """Concatenate worker/shard partial-output tuples along the W axis.
+    i == 0 is the theta pytree (leafwise concat); 1/2 are the weight/loss
+    stacks.  Host-side glue only — no arithmetic, so exactness holds."""
+    if i == 0:
+        return jax.tree.map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0),
+            *[o[0] for o in outs])
+    return jnp.concatenate([o[i] for o in outs], axis=0)
 
 
 def _probe_row_bytes(dataset, *, batch_size=None, seq_len=None) -> int:
@@ -177,6 +189,8 @@ class RoundResult:
     padded_steps: int = 0          # dispatched-but-masked scan steps (the
     #                                idle time bucket_mode="worker" attacks)
     combine_bytes: int = 0         # cross-shard combine transfer (mesh path)
+    residual_norm: float = 0.0     # L2 of the error-feedback residuals after
+    #                                this round (compressed combine only)
 
 
 @dataclass
@@ -208,6 +222,14 @@ class EngineConfig:
     combine_mode: str = "flat"     # "flat": one global combine over all lane
     #                                partials; "tree": per-shard partial merge
     #                                before the cross-shard combine (§3.3)
+    combine_compress: str = "none"  # compress each shard's merged partial
+    #                                before the cross-shard combine: "none"
+    #                                (exact, the bit-identity reference) |
+    #                                "int8" (per-leaf symmetric quant) |
+    #                                "topk" (sparsify, combine_topk_frac);
+    #                                both delta-encode against the global
+    #                                model with error-feedback residuals
+    combine_topk_frac: float = 0.05  # fraction of entries topk sends per leaf
     # -- control plane (repro.control): any non-default knob enables it ----
     telemetry_mode: str = "synthetic"   # "synthetic" | "measured"
     barrier_policy: str = "reuse"       # "reuse" | "stall" (measured mode)
@@ -258,6 +280,22 @@ class EngineConfig:
                 "combine_mode='tree' requires mesh_workers >= 2 (with one "
                 "shard there is no shard-local partial merge to run before "
                 "the cross-shard combine)")
+        if self.combine_compress not in ("none", "int8", "topk"):
+            raise ValueError("combine_compress must be 'none', 'int8' or "
+                             f"'topk', got {self.combine_compress!r}")
+        if self.combine_compress != "none" and self.combine_mode != "tree":
+            # Compression acts on a SHARD's merged partial — the §3.3
+            # hierarchy's node→server upload.  The flat combine ships raw
+            # lane partials and stays the bit-identity reference; silently
+            # compressing it would blur which path is exact.
+            raise ValueError(
+                "combine_compress requires combine_mode='tree' (and hence "
+                "mesh_workers >= 2): only the per-shard merged partials of "
+                "the hierarchical combine have a shard→root upload to "
+                "compress; the flat combine is the exact reference path")
+        if not 0.0 < self.combine_topk_frac <= 1.0:
+            raise ValueError("combine_topk_frac must be in (0, 1], got "
+                             f"{self.combine_topk_frac!r}")
         if self.adapt_granularity not in ("type", "worker"):
             raise ValueError("adapt_granularity must be 'type' or 'worker', "
                              f"got {self.adapt_granularity!r}")
@@ -326,6 +364,7 @@ class _PreparedRound:
     # consumer-set: [(wid, type_name, xs, pred_s, meas_s)]
     padded_steps: int = 0    # dispatched-but-masked scan steps this round
     combine_bytes: int = 0   # consumer-set: cross-shard combine transfer
+    residual_norm: float = 0.0  # consumer-set: error-feedback residual L2
 
 
 class FederatedEngine:
@@ -488,6 +527,28 @@ class FederatedEngine:
                 self._merge_step = StepCompileCache(
                     lambda: make_shard_merge_step(),
                     capacity=config.compile_cache_size, donate="none")
+        # Compressed cross-shard combine (combine_compress != "none"): the
+        # shard→root payload is a delta-encoded int8/topk tree instead of a
+        # dense partial, with per-shard error-feedback residuals owned by
+        # the compressor (consumer-side, strict round order — same ownership
+        # as params).  The "none" path above stays byte-for-byte untouched.
+        self._compress = None
+        self._encode_step = None
+        self._compressed_combine_step = None
+        if config.combine_compress != "none":
+            from repro.compress import CombineCompressor, make_encode_step
+            self._compress = CombineCompressor(
+                config.combine_compress, init_params,
+                topk_frac=config.combine_topk_frac)
+            self._encode_step = StepCompileCache(
+                lambda: make_encode_step(config.combine_compress,
+                                         config.combine_topk_frac),
+                capacity=config.compile_cache_size, donate="none")
+            self._compressed_combine_step = StepCompileCache(
+                lambda: make_compressed_combine_step(
+                    config.combine_compress, agg_impl=config.agg_impl),
+                capacity=config.compile_cache_size, donate="none",
+                donate_argnums=(0,) if config.donate_buffers else ())
         # Persistent per-shard sync pool (engine lifetime): spawning and
         # joining an executor inside every round's _execute_mesh would add
         # thread churn to exactly the window measured as exec_s.
@@ -504,6 +565,9 @@ class FederatedEngine:
             n += self._worker_step.compiles + self._combine_step.compiles
         if self._merge_step is not None:
             n += self._merge_step.compiles
+        if self._compress is not None:
+            n += (self._encode_step.compiles
+                  + self._compressed_combine_step.compiles)
         return n
 
     @property
@@ -524,6 +588,13 @@ class FederatedEngine:
                 for k in ("compiles", "evictions", "hits", "entries"):
                     stats[k] = stats[k] + ms[k]
                 stats["merge_step"] = ms
+            if self._compress is not None:
+                es = self._encode_step.stats()
+                ccs = self._compressed_combine_step.stats()
+                for k in ("compiles", "evictions", "hits", "entries"):
+                    stats[k] = stats[k] + es[k] + ccs[k]
+                stats["encode_step"] = es
+                stats["compressed_combine_step"] = ccs
         return stats
 
     @property
@@ -916,17 +987,14 @@ class FederatedEngine:
         # the same _reduce_partials tail applied to the [K, 1, ...] stack.
         # (On a real multi-device mesh the concat implies the shard→combine
         # gather; the runtime inserts those transfers.)
-        def _cat(outs, i):
-            if i == 0:
-                return jax.tree.map(
-                    lambda *leaves: jnp.concatenate(leaves, axis=0),
-                    *[o[0] for o in outs])
-            return jnp.concatenate([o[i] for o in outs], axis=0)
+        _cat = _cat_parts
 
         if self._merge_step is not None:
             by_group: dict[int, list] = {}
             for d in dispatched:
                 by_group.setdefault(d[2], []).append(d[5])
+            if self._compress is not None:
+                return self._combine_compressed(prep, by_group)
             parts = []
             for shard in sorted(by_group):
                 outs = by_group[shard]
@@ -958,6 +1026,59 @@ class FederatedEngine:
         new_params, metrics = fn(self.params, theta_wp, n_wp, lane_losses,
                                  step_mask, boundary, weight)
         self.params = new_params
+        return metrics
+
+    def _combine_compressed(self, prep: _PreparedRound, by_group: dict):
+        """Compressed cross-shard combine tail (``combine_compress`` =
+        ``int8``/``topk``): per shard, merge its lane partials with the same
+        shard-merge program the exact tree path uses, DELTA-encode the
+        merged partial against the global model through the shard's
+        error-feedback residual, ship only the compressed payload to the
+        combine root, and fold the K payloads through the fused
+        dequant-merge combine program.  ``combine_bytes`` accounts the
+        *compressed* wire format; the weight/loss scalars stay exact.
+
+        Residuals commit only after the combine program is dispatched
+        without error — a round that dies mid-combine leaves the previous
+        round's residual set intact (and a checkpoint restore reloads the
+        set matching ``round_idx`` exactly)."""
+        efn, _ = self._encode_step.lookup(("encode",))
+        payloads, ns, losses = [], [], []
+        staged: dict[int, object] = {}
+        for shard in sorted(by_group):
+            outs = by_group[shard]
+            th = _cat_parts(outs, 0)
+            n_s = _cat_parts(outs, 1)
+            ls_s = _cat_parts(outs, 2)
+            mfn, _ = self._merge_step.lookup(
+                (int(n_s.shape[0]), int(n_s.shape[1])))
+            merged_th, merged_n, merged_ls = mfn(th, n_s, ls_s)
+            theta = jax.tree.map(lambda x: x[0, 0], merged_th)
+            payload, res = efn(self.params, theta,
+                               self._compress.residual(shard))
+            staged[shard] = res
+            if self._combine_root is not None:
+                # the cross-shard hop: only the compressed payload crosses
+                payload = jax.device_put(payload, self._combine_root)
+            payloads.append(payload)
+            ns.append(merged_n[0, 0])
+            losses.append(merged_ls[0, 0])
+        payload_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+        n_stack = jnp.stack(ns)
+        loss_stack = jnp.stack(losses)
+        prep.combine_bytes = len(payloads) * self._compress.payload_bytes
+        step_mask, boundary, weight = prep.combine_masks
+        cfn, _ = self._compressed_combine_step.lookup(
+            (len(payloads),) + tuple(step_mask.shape))
+        new_params, metrics = cfn(self.params, payload_stack, n_stack,
+                                  loss_stack, step_mask, boundary, weight)
+        self.params = new_params
+        self._compress.commit(staged)
+        prep.residual_norm = self._compress.residual_norm()
+        if self.control is not None:
+            self.control.on_combine_compressed(
+                prep.t, bytes_sent=prep.combine_bytes,
+                residual_norm=prep.residual_norm)
         return metrics
 
     def _execute(self, prep: _PreparedRound):
@@ -1025,7 +1146,8 @@ class FederatedEngine:
             drift_fallback=prep.fallback,
             affinity_swaps=prep.affinity_swaps,
             padded_steps=prep.padded_steps,
-            combine_bytes=prep.combine_bytes)
+            combine_bytes=prep.combine_bytes,
+            residual_norm=prep.residual_norm)
         self.history.append(result)
         self.round_idx = t + 1
         self._sampler_ckpt_state = prep.sampler_st
@@ -1231,7 +1353,15 @@ class FederatedEngine:
             extra["telemetry"] = {
                 t: [list(r) for r in list(m._xs) if r[0] < self.round_idx]
                 for t, m in list(self.placement.models.items())}
-        self.ckpt.save(self.round_idx, self.params, extra=extra)
+        aux = None
+        if self._compress is not None:
+            # Error-feedback residuals: consumer-owned, committed for rounds
+            # <= round_idx - 1 by checkpoint time, so the aux sidecar matches
+            # round_idx exactly.  Without them a resumed compressed run would
+            # re-lose every update's quantization error once.
+            extra["combine_compress"] = self._compress.state_meta()
+            aux = self._compress.state_aux()
+        self.ckpt.save(self.round_idx, self.params, extra=extra, aux=aux)
 
     def restore_latest(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_round() is None:
@@ -1264,6 +1394,39 @@ class FederatedEngine:
                 print("warning: checkpoint telemetry RNG state unusable "
                       f"({e!r}); resuming with a fresh stream — synthetic "
                       "times will NOT match the uninterrupted run")
+        if self._compress is not None:
+            # Drop any residuals from rounds past the restore point, then
+            # reload the set the checkpoint captured (if any — a checkpoint
+            # written before the first compressed round has none, and a
+            # mode/frac mismatch means the snapshot's residuals are in the
+            # wrong basis entirely).
+            self._compress.reset()
+            meta = extra.get("combine_compress")
+            if meta and meta.get("shards"):
+                if (meta.get("mode") != self.cfg.combine_compress
+                        or meta.get("frac") != self.cfg.combine_topk_frac):
+                    print("warning: checkpoint combine_compress state "
+                          f"({meta.get('mode')!r}, frac={meta.get('frac')}) "
+                          "does not match the configured compressor; "
+                          "resuming with zero residuals — the resumed run "
+                          "will NOT match the uninterrupted one")
+                else:
+                    try:
+                        aux = self.ckpt.restore_aux(
+                            self._compress.aux_like(meta["shards"]),
+                            round_idx=rnd)
+                        if aux is not None:
+                            self._compress.load_state(aux)
+                        else:
+                            print("warning: checkpoint lists compressed-"
+                                  "combine residuals but the .aux.npz "
+                                  "sidecar is missing; resuming with zero "
+                                  "residuals")
+                    except (KeyError, ValueError) as e:
+                        print("warning: checkpoint residual state unusable "
+                              f"({e!r}); resuming with zero residuals — the "
+                              "resumed run will NOT match the uninterrupted "
+                              "one")
         if isinstance(self.placement, LearningBasedPlacement) and "telemetry" in extra:
             for tname, rows in extra["telemetry"].items():
                 m = self.placement._model(tname)

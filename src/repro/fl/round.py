@@ -67,8 +67,9 @@ from repro.core.aggregation import (PartialAggregate, partial_init,
 from repro.optim.optimizers import apply_updates
 
 __all__ = ["make_round_step", "make_worker_round_step", "make_combine_step",
-           "make_shard_merge_step", "make_gather_round_step", "RoundMetrics",
-           "StepCompileCache", "round_shape_key"]
+           "make_shard_merge_step", "make_compressed_combine_step",
+           "make_gather_round_step", "RoundMetrics", "StepCompileCache",
+           "round_shape_key"]
 
 
 class RoundMetrics(NamedTuple):
@@ -318,6 +319,94 @@ def make_shard_merge_step():
         return theta, acc.weight[None, None], loss_sum[None, None]
 
     return merge
+
+
+def make_compressed_combine_step(mode: str, *, agg_impl: str = "xla"):
+    """The cross-shard combine over COMPRESSED shard partials
+    (``EngineConfig.combine_compress = "int8" | "topk"``).
+
+    ``combine(global_params, payload, n_stack, loss_stack, step_mask,
+    boundary, weight) -> (new_global, metrics)`` — a ``lax.scan`` left fold
+    over the K shard payloads (dispatch order: deterministic association,
+    bit-identical across pipeline depths and bucket modes), where each fold
+    step reconstructs the shard's partial as ``g + dequant(payload_k)`` and
+    blends it into the running Eq. 1 accumulator:
+
+        acc <- (acc*N + (g + dequant(payload_k))*n_k) / (N + n_k)
+
+    With ``mode="int8"`` and ``agg_impl="pallas"`` the dequant + blend is
+    the fused one-HBM-pass :func:`repro.kernels.ops.dequant_merge` kernel —
+    the int8 payload never materializes as a dense float tree.  ``topk``
+    payloads scatter their (idx, vals) pairs inside the same jitted fold
+    (sparse → dense is already one fused XLA scatter; there is no separate
+    dense temporary to eliminate).
+
+    ``payload``: leaves stacked [K, ...] across shards — ``(int8 tree,
+    scales tree)`` for int8, a tree of ``(idx, vals)`` per leaf for topk.
+    ``n_stack``/``loss_stack``: [K] per-shard weight / scan-carried loss
+    totals (exact — scalars never compress, so the loss metric matches the
+    uncompressed tree combine bitwise).  Weight/loss/steps metrics mirror
+    :func:`_reduce_partials`; only the parameter average is approximate,
+    and error feedback (see :mod:`repro.compress.combine`) re-sends the
+    quantization error in later rounds."""
+    if mode not in ("int8", "topk"):
+        raise ValueError(f"combine_compress mode must be int8|topk, got {mode!r}")
+
+    def _blend(acc, theta, n_old, n_k):
+        # Eq. 1 with the zero-weight guard (all f32 here).
+        n_new = n_old + n_k
+        denom = jnp.where(n_new > 0, n_new, 1.0)
+        out = (acc * n_old + theta * n_k) / denom
+        return jnp.where(n_new > 0, out, acc)
+
+    def combine(global_params, payload, n_stack, loss_stack, step_mask,
+                boundary, weight):
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), global_params)
+
+        def fold(carry, xs):
+            acc, n_old = carry
+            payload_k, n_k = xs
+            if mode == "int8":
+                q_k, s_k = payload_k
+                if agg_impl == "pallas":
+                    from repro.kernels import ops as kops
+                    new_acc = jax.tree.map(
+                        lambda a, q, g, s: kops.dequant_merge(
+                            a, q, g, s, n_old, n_k),
+                        acc, q_k, gf, s_k)
+                else:
+                    new_acc = jax.tree.map(
+                        lambda a, q, g, s: _blend(
+                            a, g + q.astype(jnp.float32) * s, n_old, n_k),
+                        acc, q_k, gf, s_k)
+            else:
+                flat_p, tdef = jax.tree_util.tree_flatten(
+                    payload_k, is_leaf=lambda x: isinstance(x, tuple))
+                flat_g = tdef.flatten_up_to(gf)
+                flat_a = tdef.flatten_up_to(acc)
+                new_leaves = []
+                for (idx, vals), g, a in zip(flat_p, flat_g, flat_a):
+                    delta = (jnp.zeros(g.size, jnp.float32).at[idx].set(vals)
+                             .reshape(g.shape))
+                    new_leaves.append(_blend(a, g + delta, n_old, n_k))
+                new_acc = tdef.unflatten(new_leaves)
+            return (new_acc, n_old + n_k), None
+
+        init = (jax.tree.map(jnp.zeros_like, gf), jnp.zeros((), jnp.float32))
+        (acc, total_w), _ = jax.lax.scan(fold, init, (payload, n_stack))
+        new_global = jax.tree.map(
+            lambda m_, g: jnp.where(total_w > 0, m_.astype(g.dtype), g),
+            acc, global_params)
+        n_steps = step_mask.sum()
+        metrics = RoundMetrics(
+            loss=_ordered_sum(loss_stack) / jnp.maximum(n_steps, 1.0),
+            steps=n_steps,
+            clients=boundary.sum(),
+            total_weight=total_w,
+        )
+        return new_global, metrics
+
+    return combine
 
 
 def make_gather_round_step(loss_fn, optimizer, *, grad_clip: float | None = None):

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for the compressed cross-shard combine: fused
+dequantize + partial_merge + rescale in ONE pass over HBM.
+
+The compressed combine folds each shard's int8-quantized delta payload into
+the running Eq. 1 accumulator:
+
+    theta = g + q * scale                       # dequantize the shard delta
+    out   = (acc * N + theta * n) / (N + n)     # Eq. 1 blend (N+n == 0 -> acc)
+
+Unfused, the dequantized ``theta`` is a full params-sized f32 temporary that
+makes a round trip through HBM between the dequant and the merge.  The fused
+kernel reads acc (f32), q (int8) and g (f32) once, blends in VMEM, and
+writes out (f32) once — the int8 payload never materializes as floats.
+
+Tiling mirrors :mod:`repro.kernels.fedavg_accum`: the flattened parameter
+vector is reshaped to (rows, 1024) lanes and blocked (block_rows, 1024).
+The three scalars — N (accumulated weight), n (shard weight) and the
+per-leaf quantization scale — ride in SMEM via scalar prefetch, so one
+compiled kernel serves every leaf, shard and scan iteration.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dequant_merge_2d", "LANES"]
+
+LANES = 1024  # second-minor tile width (8 sublanes x 128 lanes)
+
+
+def _kernel(scal_ref, acc_ref, q_ref, g_ref, out_ref):
+    n_old = scal_ref[0]
+    n_k = scal_ref[1]
+    scale = scal_ref[2]
+    n_new = n_old + n_k
+    denom = jnp.where(n_new > 0, n_new, 1.0)
+    acc = acc_ref[...].astype(jnp.float32)
+    theta = g_ref[...].astype(jnp.float32) + q_ref[...].astype(jnp.float32) * scale
+    blended = (acc * n_old + theta * n_k) / denom
+    out_ref[...] = jnp.where(n_new > 0, blended, acc).astype(out_ref.dtype)
+
+
+def dequant_merge_2d(acc, q, g, scale, n_old, n_k, *, block_rows=256, interpret=False):
+    """acc/g: [rows, LANES] f32; q: [rows, LANES] int8; scalars f32."""
+    rows, lanes = acc.shape
+    if lanes != LANES:
+        raise ValueError(f"expected lane dim {LANES}, got {lanes}")
+    if q.shape != acc.shape or g.shape != acc.shape:
+        raise ValueError(
+            f"shape mismatch: acc {acc.shape}, q {q.shape}, g {g.shape}"
+        )
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        raise ValueError(f"rows {rows} not divisible by block {block_rows}")
+    scal = jnp.stack(
+        [
+            jnp.asarray(n_old, jnp.float32),
+            jnp.asarray(n_k, jnp.float32),
+            jnp.asarray(scale, jnp.float32),
+        ]
+    )
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i, *_: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        interpret=interpret,
+    )(scal, acc, q, g)

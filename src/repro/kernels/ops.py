@@ -5,6 +5,7 @@ block sizes, and fall back to interpret mode off-TPU so the same call sites
 work in tests (CPU), dry-runs, and on real hardware.
 
     fedavg_accum(acc, theta, n_old, n_k)        — any-shape pytree leaf
+    dequant_merge(acc, q, g, scale, n_old, n_k) — any-shape pytree leaf
     rmsnorm(x, scale)                           — [..., D]
     flash_attention(q, k, v, causal=...)        — [b, s, h, d] model layout
     ssd(x, dt, A_log, B, C, D, chunk=...)       — [b, s, h, p] model layout
@@ -17,13 +18,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dequant_merge as _dm
 from repro.kernels import fedavg_accum as _fa
 from repro.kernels import flash_attention as _fl
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd as _ssd
 
-__all__ = ["fedavg_accum", "rmsnorm", "flash_attention", "ssd",
-           "on_tpu", "INTERPRET"]
+__all__ = ["fedavg_accum", "dequant_merge", "rmsnorm", "flash_attention",
+           "ssd", "on_tpu", "INTERPRET"]
 
 
 def on_tpu() -> bool:
@@ -59,6 +61,34 @@ def fedavg_accum(acc, theta, n_old, n_k, *, block_rows: int = 256):
                               flat_t.reshape(rows, lanes),
                               n_old, n_k, block_rows=block,
                               interpret=INTERPRET)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def dequant_merge(acc, q, g, scale, n_old, n_k, *, block_rows: int = 256):
+    """Fused compressed-combine fold on one pytree leaf of any shape:
+    theta = g + q*scale (int8 dequant), out = Eq. 1 blend of theta into acc
+    — one HBM pass, no dense theta materialization."""
+    shape, dtype = acc.shape, acc.dtype
+    flat_a = acc.reshape(-1)
+    flat_q = q.reshape(-1)
+    flat_g = g.astype(dtype).reshape(-1)
+    n = flat_a.size
+    lanes = _dm.LANES
+    rows = max(1, _round_up(n, lanes) // lanes)
+    block = min(block_rows, rows)
+    while rows % block:
+        block -= 1
+    pad = rows * lanes - n
+    if pad:
+        flat_a = jnp.pad(flat_a, (0, pad))
+        flat_q = jnp.pad(flat_q, (0, pad))
+        flat_g = jnp.pad(flat_g, (0, pad))
+    out = _dm.dequant_merge_2d(flat_a.reshape(rows, lanes),
+                               flat_q.reshape(rows, lanes),
+                               flat_g.reshape(rows, lanes),
+                               scale, n_old, n_k, block_rows=block,
+                               interpret=INTERPRET)
     return out.reshape(-1)[:n].reshape(shape)
 
 

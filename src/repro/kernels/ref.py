@@ -11,7 +11,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fedavg_accum_ref", "rmsnorm_ref", "attention_ref", "ssd_ref"]
+__all__ = ["fedavg_accum_ref", "dequant_merge_ref", "rmsnorm_ref",
+           "attention_ref", "ssd_ref"]
 
 
 def fedavg_accum_ref(acc, theta, n_old, n_k):
@@ -22,6 +23,20 @@ def fedavg_accum_ref(acc, theta, n_old, n_k):
     denom = jnp.where(n_new > 0, n_new, 1.0)
     out = (acc.astype(jnp.float32) * n_old
            + theta.astype(jnp.float32) * n_k) / denom
+    return jnp.where(n_new > 0, out, acc.astype(jnp.float32)).astype(acc.dtype)
+
+
+def dequant_merge_ref(acc, q, g, scale, n_old, n_k):
+    """Compressed-combine fold: dequantize an int8 delta payload against the
+    global model g, then Eq. 1-blend it into the running accumulator —
+    theta = g + q*scale; out = (acc*N + theta*n)/(N+n); N+n == 0 -> acc."""
+    n_old = jnp.asarray(n_old, jnp.float32)
+    n_k = jnp.asarray(n_k, jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    n_new = n_old + n_k
+    denom = jnp.where(n_new > 0, n_new, 1.0)
+    theta = g.astype(jnp.float32) + q.astype(jnp.float32) * scale
+    out = (acc.astype(jnp.float32) * n_old + theta * n_k) / denom
     return jnp.where(n_new > 0, out, acc.astype(jnp.float32)).astype(acc.dtype)
 
 

@@ -42,6 +42,49 @@ def test_fedavg_accum_weight_edges(n_old, n_k):
 
 
 # ---------------------------------------------------------------------------
+# dequant_merge (fused compressed-combine fold)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(7,), (33,), (300, 5), (129, 1025),
+                                   (2, 3, 5, 7), (4096,)])
+def test_dequant_merge_shapes(shape):
+    a = jax.random.normal(jax.random.fold_in(KEY, 20), shape)
+    g = jax.random.normal(jax.random.fold_in(KEY, 21), shape)
+    q = jax.random.randint(jax.random.fold_in(KEY, 22), shape, -128, 128,
+                           jnp.int8)
+    out = ops.dequant_merge(a, q, g, 0.013, 10.0, 3.0)
+    want = ref.dequant_merge_ref(a, q, g, 0.013, 10.0, 3.0)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+    assert out.shape == shape and out.dtype == a.dtype
+
+
+@pytest.mark.parametrize("n_old,n_k", [(0.0, 0.0), (0.0, 4.0), (7.0, 0.0)])
+def test_dequant_merge_weight_edges(n_old, n_k):
+    """N+n == 0 must return acc bit-exactly (the guarded-fold invariant the
+    compressed combine's masked scan steps rely on)."""
+    a = jax.random.normal(jax.random.fold_in(KEY, 23), (50,))
+    g = a * 0.5
+    q = jnp.full((50,), 17, jnp.int8)
+    out = ops.dequant_merge(a, q, g, 0.1, n_old, n_k)
+    want = ref.dequant_merge_ref(a, q, g, 0.1, n_old, n_k)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+    if n_old + n_k == 0.0:
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(a))
+
+
+def test_dequant_merge_matches_unfused():
+    """The fused kernel equals dequant-then-fedavg_accum composed."""
+    a = jax.random.normal(jax.random.fold_in(KEY, 24), (513,))
+    g = jax.random.normal(jax.random.fold_in(KEY, 25), (513,))
+    q = jax.random.randint(jax.random.fold_in(KEY, 26), (513,), -128, 128,
+                           jnp.int8)
+    scale = 0.021
+    theta = g + q.astype(jnp.float32) * scale
+    want = ops.fedavg_accum(a, theta, 6.0, 2.0)
+    out = ops.dequant_merge(a, q, g, scale, 6.0, 2.0)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("shape", [(4, 64), (2, 3, 128), (5, 256), (1, 512)])

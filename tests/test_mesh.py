@@ -26,7 +26,7 @@ from repro.optim import sgd
 def _engine(mesh=0, depth=1, cache=0, placement="lb", telemetry="synthetic",
             drift=0.0, adapt=0, sampler="uniform", affinity=False,
             granularity="type", strategy=None, workers=4, bucket="round",
-            combine="flat", pool=None, steps_cap=4):
+            combine="flat", compress="none", pool=None, steps_cap=4):
     ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
                                 batch_size=4, size_mu=2.5, size_sigma=0.8)
     params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
@@ -46,6 +46,7 @@ def _engine(mesh=0, depth=1, cache=0, placement="lb", telemetry="synthetic",
                             device_cache_batches=cache,
                             cache_affinity=affinity,
                             bucket_mode=bucket, combine_mode=combine,
+                            combine_compress=compress,
                             telemetry_mode=telemetry,
                             drift_threshold=drift, adapt_interval=adapt,
                             adapt_granularity=granularity))

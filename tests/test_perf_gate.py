@@ -33,6 +33,14 @@ def _record():
                        "worker_step_compiles": 3},
             "tree": {"padded_steps": 320, "combine_bytes": 165000,
                      "worker_step_compiles": 3},
+            "int8": {"padded_steps": 320, "combine_bytes": 41000,
+                     "worker_step_compiles": 3,
+                     "compression_ratio_vs_flat": 8.0,
+                     "final_loss_rel_dev_vs_tree": 0.001},
+            "topk": {"padded_steps": 320, "combine_bytes": 16500,
+                     "worker_step_compiles": 3,
+                     "compression_ratio_vs_flat": 20.0,
+                     "final_loss_rel_dev_vs_tree": -0.4},
         },
     }
 
@@ -88,6 +96,15 @@ def test_each_regression_class_is_caught():
         ("tree combine stopped shrinking the transfer",
          lambda r: r["hierarchy"]["tree"].__setitem__(
              "combine_bytes", 330000)),
+        ("int8 compression ratio collapsed",
+         lambda r: r["hierarchy"]["int8"].__setitem__(
+             "compression_ratio_vs_flat", 2.0)),
+        ("topk compression ratio collapsed",
+         lambda r: r["hierarchy"]["topk"].__setitem__(
+             "compression_ratio_vs_flat", 6.0)),
+        ("compressed training degraded past tolerance",
+         lambda r: r["hierarchy"]["int8"].__setitem__(
+             "final_loss_rel_dev_vs_tree", 0.4)),
     ]
     for name, mutate in cases:
         fresh = copy.deepcopy(_record())

@@ -42,6 +42,10 @@ ARCHITECTURE_NEEDLES = (
     "Hierarchical combine", "bucket_mode", "combine_mode",
     "make_shard_merge_step", "Orphan-shard reclamation", "rebalance",
     "live_shards", "discard_workers", "combine_bytes",
+    # the compressed cross-shard combine (delta wire format, error
+    # feedback, fused dequant-merge kernel, checkpointed residuals)
+    "Compressed combine", "combine_compress", "error feedback",
+    "CombineCompressor", "dequant-merge", "residual_norm",
 )
 
 
