@@ -208,7 +208,50 @@ def compare(
                 f"negative = converged lower)",
             )
 
+    # -- machine-independent: open-world population ---------------------------
+    ident = require("population.losses_identical")
+    if ident is not None:
+        check(bool(ident), "population pipeline depths changed training losses")
+    peak = require("population.store_peak_kb")
+    if peak is not None:
+        check(
+            peak < 512,
+            f"population: registering 1M clients peaked at {peak:.0f}KB host "
+            f"memory — the registry is materializing (O(1) budget 512KB)",
+        )
+    bounded = require("population.draws_bounded")
+    if bounded is not None:
+        check(
+            bool(bounded),
+            "population: the rejection sampler blew its draw budget "
+            "(max_draw_factor * cohort)",
+        )
+    p50 = require("population.slo_p50")
+    p99 = require("population.slo_p99")
+    if p50 is not None and p99 is not None:
+        check(
+            p99 >= p50,
+            f"population: slo_p99 {p99:.2f}s below slo_p50 {p50:.2f}s — the "
+            f"percentile wiring is broken",
+        )
+    stale = require("population.stale_fraction")
+    base_stale = _get(baseline, "population.stale_fraction")
+    if stale is not None and base_stale is not None:
+        check(
+            stale <= base_stale + 0.10,
+            f"population: stale-client fraction {stale:.2f} regressed vs "
+            f"baseline {base_stale:.2f} (slack 0.10)",
+        )
+
     # -- cross-run timing band ----------------------------------------------
+    pop_s = require("population.wall_s_per_round")
+    base_pop_s = _get(baseline, "population.wall_s_per_round")
+    if pop_s is not None and base_pop_s is not None and base_pop_s > 0:
+        check(
+            pop_s <= base_pop_s * time_tol,
+            f"population round {pop_s:.3f}s is more than {time_tol:.1f}x "
+            f"the baseline {base_pop_s:.3f}s",
+        )
     pack_s = require("pack.vectorized_pack_s_per_round")
     base_s = _get(baseline, "pack.vectorized_pack_s_per_round")
     if pack_s is not None and base_s is not None and base_s > 0:

@@ -52,6 +52,9 @@ TREND_METRICS: dict = {
         ("hierarchy.topk.combine_bytes", "count", 0),
         ("hierarchy.int8.compression_ratio_vs_flat", "floor", 0.1),
         ("hierarchy.topk.compression_ratio_vs_flat", "floor", 0.5),
+        ("population.store_peak_kb", "band", 2.0),
+        ("population.wall_s_per_round", "band", 2.0),
+        ("population.stale_fraction", "count", 0.10),
     ],
     "kernels": [
         # correctness deltas are deterministic on a given backend; the

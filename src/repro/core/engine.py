@@ -158,6 +158,21 @@ def _cat_parts(outs, i):
     return jnp.concatenate([o[i] for o in outs], axis=0)
 
 
+def _slo_percentiles(rows) -> tuple[float, float]:
+    """p50/p99 of the per-client round times in ``rows`` ([(type, x, t_c)]).
+
+    Computed producer-side from whichever per-client times the prepare
+    stage already has — synthetic draws or measured-mode predictions — so
+    the SLO metrics exist at every pipeline depth and on the mesh path
+    (which nulls the ``shares`` attribution list afterwards).
+    """
+    if not rows:
+        return 0.0, 0.0
+    ts = np.asarray([r[2] for r in rows], dtype=np.float64)
+    p50, p99 = np.percentile(ts, [50.0, 99.0])
+    return float(p50), float(p99)
+
+
 def _probe_row_bytes(dataset, *, batch_size=None, seq_len=None) -> int:
     """Bytes of one packed batch row (all leaves), from a one-batch gather."""
     probe = dataset.gather_batches(np.asarray([0]), np.asarray([0]),
@@ -191,6 +206,15 @@ class RoundResult:
     combine_bytes: int = 0         # cross-shard combine transfer (mesh path)
     residual_norm: float = 0.0     # L2 of the error-feedback residuals after
     #                                this round (compressed combine only)
+    # -- deadline-SLO metrics (open-world population; see docs/POPULATION.md)
+    slo_p50: float = 0.0           # median per-client round time (simulated
+    #                                draws or prepare-time predictions)
+    slo_p99: float = 0.0           # tail per-client round time — the
+    #                                deadline-SLO gauge
+    stale_fraction: float = 0.0    # cohort fraction drafted while OFFLINE
+    #                                (the online pool could not fill it)
+    online_pool: float = 0.0       # expected online-pool size at sample time
+    #                                (0 for closed-registry samplers)
 
 
 @dataclass
@@ -365,6 +389,11 @@ class _PreparedRound:
     padded_steps: int = 0    # dispatched-but-masked scan steps this round
     combine_bytes: int = 0   # consumer-set: cross-shard combine transfer
     residual_norm: float = 0.0  # consumer-set: error-feedback residual L2
+    # -- deadline-SLO metrics, computed producer-side in round order -------
+    slo_p50: float = 0.0
+    slo_p99: float = 0.0
+    stale_fraction: float = 0.0
+    online_pool: float = 0.0
 
 
 class FederatedEngine:
@@ -774,6 +803,7 @@ class FederatedEngine:
         if self.cfg.telemetry_mode == "measured":
             makespan, idle, shares, loads = self._predict_round(
                 t, assignment, workers)
+            time_rows = shares
             if mesh_map is not None:
                 # Per-worker programs sync individually: worker times are
                 # measured exactly, the round-level predicted-share
@@ -782,9 +812,18 @@ class FederatedEngine:
         else:
             makespan, idle, rows = self._record_telemetry(t, assignment,
                                                           workers)
+            time_rows = rows
             if ctl is not None:
                 ctl.round_prepared(t, makespan=makespan,
                                    n_clients=len(clients), rows=rows)
+        # Deadline-SLO metrics, producer-side in round order: per-client
+        # time percentiles from the rows above, plus the online-pool stats
+        # the sampler published for THIS round's draw (same thread, read
+        # immediately — depth-invariant like every other producer mutation).
+        slo_p50, slo_p99 = _slo_percentiles(time_rows)
+        pop_stats = getattr(self.sampler, "last_stats", None) or {}
+        stale_fraction = float(pop_stats.get("stale_fraction", 0.0))
+        online_pool = float(pop_stats.get("online_pool", 0.0))
         # Snapshot the synthetic-telemetry RNG AFTER this round's draws
         # (mirrors the sampler snapshot): the checkpoint for round_idx = t+1
         # must resume the stream exactly where round t left it, regardless
@@ -838,7 +877,10 @@ class FederatedEngine:
                                   worker_programs=worker_programs,
                                   combine_masks=combine_masks,
                                   affinity_swaps=n_swaps,
-                                  padded_steps=padded)
+                                  padded_steps=padded,
+                                  slo_p50=slo_p50, slo_p99=slo_p99,
+                                  stale_fraction=stale_fraction,
+                                  online_pool=online_pool)
         if self._device_cache is not None:
             # Cache path: no full-size host batch buffer exists at all —
             # masks are built host-side as usual, but content travels as a
@@ -874,7 +916,10 @@ class FederatedEngine:
                               fallback=fallback, sampler_st=sampler_st,
                               telemetry_st=telemetry_st,
                               padded_steps=(arrays.step_mask.size
-                                            - plan.n_steps_total))
+                                            - plan.n_steps_total),
+                              slo_p50=slo_p50, slo_p99=slo_p99,
+                              stale_fraction=stale_fraction,
+                              online_pool=online_pool)
 
     def _pack_worker_programs(self, t, plan, worker_S, arrays, assignment,
                               workers, mesh_map, loads):
@@ -1147,7 +1192,10 @@ class FederatedEngine:
             affinity_swaps=prep.affinity_swaps,
             padded_steps=prep.padded_steps,
             combine_bytes=prep.combine_bytes,
-            residual_norm=prep.residual_norm)
+            residual_norm=prep.residual_norm,
+            slo_p50=prep.slo_p50, slo_p99=prep.slo_p99,
+            stale_fraction=prep.stale_fraction,
+            online_pool=prep.online_pool)
         self.history.append(result)
         self.round_idx = t + 1
         self._sampler_ckpt_state = prep.sampler_st

@@ -68,21 +68,34 @@ class ZipfSampler:
 
 
 class PowerOfChoiceSampler:
-    """Oversample ``d >= m`` candidates, pick the m largest by loss."""
+    """Oversample ``d >= m`` candidates, pick the m largest by loss.
+
+    The loss oracle is a *constructor* argument so ``sample(round_idx)``
+    matches every other sampler's signature (the engine and the streaming
+    OnlinePoolSampler share one protocol).  ``sample(t, client_loss)``
+    still works for callers that supply a per-round oracle; with no oracle
+    at all the sampler degenerates to a uniform pick of the first m
+    candidates (the documented warm-up behaviour before any loss exists).
+    """
 
     def __init__(self, population: int, cohort_size: int, *, d: int | None = None,
-                 seed: int = 1337):
+                 seed: int = 1337, client_loss=None):
         self.population = population
         self.cohort_size = cohort_size
         self.d = d or min(population, 2 * cohort_size)
         if self.d < cohort_size:
             raise ValueError("d must be >= cohort_size")
+        self.seed = seed
+        self.client_loss = client_loss
         self.rng = np.random.default_rng(seed)
 
-    def sample(self, round_idx: int, client_loss) -> np.ndarray:
+    def sample(self, round_idx: int, client_loss=None) -> np.ndarray:
+        oracle = client_loss if client_loss is not None else self.client_loss
         cand = self.rng.choice(self.population, size=self.d,
                                replace=self.d > self.population)
-        losses = np.asarray([client_loss(int(c)) for c in cand])
+        if oracle is None:
+            return cand[: self.cohort_size]
+        losses = np.asarray([oracle(int(c)) for c in cand])
         top = np.argsort(-losses)[: self.cohort_size]
         return cand[top]
 
@@ -115,12 +128,24 @@ class DeadlineFilter:
 # snapshot matching the restore point (see FederatedEngine.save_checkpoint).
 
 def sampler_state(sampler) -> dict | None:
-    """JSON-serializable config + RNG state, or None for unknown samplers."""
+    """JSON-serializable config + RNG state, or None for unknown samplers.
+
+    Covers every shipped sampler: uniform, zipf, power-of-choice (the loss
+    oracle itself is a callable and cannot travel — a restored "poc"
+    sampler starts with ``client_loss=None`` until the caller re-attaches
+    one) and the population package's OnlinePoolSampler (whose state embeds
+    the full arrival-index config: store params, traces, interventions).
+    """
     if isinstance(sampler, ZipfSampler):
         state = {"kind": "zipf", "a": sampler.a}
     elif isinstance(sampler, UniformSampler):
         state = {"kind": "uniform"}
+    elif isinstance(sampler, PowerOfChoiceSampler):
+        state = {"kind": "poc", "d": int(sampler.d)}
     else:
+        if hasattr(sampler, "state_dict"):          # OnlinePoolSampler et al.
+            st = sampler.state_dict()
+            return st if isinstance(st, dict) and "kind" in st else None
         return None
     state.update(population=int(sampler.population),
                  cohort_size=int(sampler.cohort_size),
@@ -139,6 +164,15 @@ def restore_sampler(state: dict):
     elif kind == "uniform":
         s = UniformSampler(state["population"], state["cohort_size"],
                            seed=state.get("seed", 1337))
+    elif kind == "poc":
+        s = PowerOfChoiceSampler(state["population"], state["cohort_size"],
+                                 d=state.get("d"),
+                                 seed=state.get("seed", 1337))
+    elif kind == "online":
+        # Lazy import: core stays importable without the population package
+        # and the package imports simcluster only (no cycle either way).
+        from repro.population.sampler import OnlinePoolSampler
+        return OnlinePoolSampler.from_state(state)
     else:
         raise ValueError(f"unknown sampler kind {kind!r}")
     if "rng" in state:

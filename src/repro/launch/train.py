@@ -100,6 +100,29 @@ class _FrontendDataset:
         return b
 
 
+def _parse_intervention(kind: str, spec: str):
+    """``START:END[:SCALE][:REGION]`` -> Intervention (outage scale is 0)."""
+    from repro.population import Intervention
+
+    parts = spec.split(":")
+    if len(parts) < 2:
+        raise ValueError(f"--population-{kind} needs START:END[:SCALE]"
+                         f"[:REGION], got {spec!r}")
+    start, end = int(parts[0]), int(parts[1])
+    scale = 0.0 if kind == "outage" else 1.5
+    region = None
+    rest = parts[2:]
+    if rest:
+        try:
+            scale = float(rest[0])
+            rest = rest[1:]
+        except ValueError:
+            pass
+    if rest:
+        region = rest[0]
+    return Intervention(kind, start, end, scale, region=region)
+
+
 def build_engine(*, task: str | None = None, arch: str | None = None,
                  preset: str = "smoke", placement: str = "lb",
                  cohort: int = 8, population: int | None = None,
@@ -110,6 +133,9 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  worker_specs=None, pipeline_depth: int = 1,
                  device_cache_batches: int = 0, device_cache_mb: float = 0.0,
                  sampler: str = "uniform", zipf_exponent: float = 1.2,
+                 population_period: float = 48.0,
+                 population_surge: str | None = None,
+                 population_outage: str | None = None,
                  telemetry_mode: str = "synthetic",
                  barrier_policy: str = "reuse", drift_threshold: float = 0.0,
                  adapt_interval: int = 0, adapt_granularity: str = "type",
@@ -119,6 +145,13 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  grad_clip: float | None = None) -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
     key = jax.random.key(seed)
+    # The open-world sampler streams from a hash-derived registry: the BASE
+    # dataset (content + class tables) stays small regardless of how many
+    # clients --population registers — the PopulationDataset wrapper below
+    # grafts the registered n_clients/sizes on without any O(N) allocation.
+    base_clients = population
+    if sampler == "online" and population:
+        base_clients = min(population, 4096)
     if arch is not None:
         base_cfg = get_arch(arch)
         p = dict(PRESETS[preset])
@@ -136,7 +169,7 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
         ds = make_federated_dataset(
             "lm", seed=seed, vocab_size=cfg.vocab_size, seq_len=seq_len,
             batch_size=batch_size,
-            n_clients=population or 4096)
+            n_clients=base_clients or 4096)
         if cfg.frontend:
             ds = _FrontendDataset(ds, cfg)
         params = init_params(key, cfg)
@@ -148,7 +181,7 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
         params, loss_fn = make_task_model(task, key)
         ds = make_federated_dataset(
             task, seed=seed,
-            **({"n_clients": population} if population else {}))
+            **({"n_clients": base_clients} if base_clients else {}))
         optimizer = adam(4e-5) if task == "mlm" else sgd(
             0.05 if task != "tg" else 0.8, momentum=0.9,
             weight_decay=5e-4 if task != "mlm" else 0.0)
@@ -158,10 +191,31 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
             else WorkerPool.homogeneous(workers, type_name="a40",
                                         concurrency=concurrency))
     strat = FedAvg() if strategy == "fedavg" else FedMedian()
-    sampler_obj = (ZipfSampler(ds.n_clients, cohort, a=zipf_exponent,
-                               seed=seed)
-                   if sampler == "zipf"
-                   else UniformSampler(ds.n_clients, cohort, seed=seed))
+    if sampler == "online":
+        from repro.population import (ArrivalIndex, ClientMetadataStore,
+                                      OnlinePoolSampler, PopulationDataset)
+        registered = population or ds.n_clients
+        store = ClientMetadataStore(registered, seed=seed,
+                                    batch_size=ds.spec.batch_size)
+        interventions = []
+        if population_surge:
+            interventions.append(
+                _parse_intervention("surge", population_surge))
+        if population_outage:
+            interventions.append(
+                _parse_intervention("outage", population_outage))
+        index = ArrivalIndex(store, period=population_period,
+                             interventions=tuple(interventions))
+        ds = PopulationDataset(ds, store)
+        sampler_obj = OnlinePoolSampler(index, cohort, seed=seed)
+    elif sampler == "zipf":
+        sampler_obj = ZipfSampler(ds.n_clients, cohort, a=zipf_exponent,
+                                  seed=seed)
+    elif sampler == "poc":
+        from repro.core.sampling import PowerOfChoiceSampler
+        sampler_obj = PowerOfChoiceSampler(ds.n_clients, cohort, seed=seed)
+    else:
+        sampler_obj = UniformSampler(ds.n_clients, cohort, seed=seed)
     engine = FederatedEngine(
         dataset=ds, loss_fn=loss_fn, init_params=params, optimizer=optimizer,
         placement=make_placement(placement), sampler=sampler_obj,
@@ -216,12 +270,28 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="HBM cache budget in MiB (0 = off; with "
                          "--device-cache-batches the tighter limit wins)")
     ap.add_argument("--sampler", default="uniform",
-                    choices=["uniform", "zipf"],
-                    help="zipf = skewed availability (hot clients recur)")
+                    choices=["uniform", "zipf", "online", "poc"],
+                    help="zipf = skewed availability (hot clients recur); "
+                         "online = open-world arrival process (diurnal "
+                         "region traces, streaming draws from a hash-"
+                         "derived registry — see docs/POPULATION.md); "
+                         "poc = Power-of-Choice oversampling")
     ap.add_argument("--zipf-exponent", type=float, default=1.2,
                     help="Zipf skew a (P(client k) ~ (k+1)**-a); persisted "
                          "in checkpoint metadata so resumes reproduce the "
                          "workload")
+    ap.add_argument("--population-period", type=float, default=48.0,
+                    help="rounds per diurnal availability cycle for "
+                         "--sampler online (every regional trace is "
+                         "rescaled to this period)")
+    ap.add_argument("--population-surge", default=None,
+                    help="START:END[:SCALE][:REGION] — multiply a region's "
+                         "(or every region's) online fraction by SCALE "
+                         "(default 1.5) over rounds [START, END)")
+    ap.add_argument("--population-outage", default=None,
+                    help="START:END[:REGION] — take a region (or all) "
+                         "offline over rounds [START, END); clients drawn "
+                         "anyway count toward stale_fraction")
     ap.add_argument("--telemetry", default="synthetic",
                     choices=["synthetic", "measured"],
                     help="measured = feed placement from wall-clock round "
@@ -334,7 +404,11 @@ def main() -> int:
         deadline_rho=args.deadline_rho, pipeline_depth=args.pipeline_depth,
         device_cache_batches=args.device_cache_batches,
         device_cache_mb=args.device_cache_mb, sampler=args.sampler,
-        zipf_exponent=args.zipf_exponent, telemetry_mode=args.telemetry,
+        zipf_exponent=args.zipf_exponent,
+        population_period=args.population_period,
+        population_surge=args.population_surge,
+        population_outage=args.population_outage,
+        telemetry_mode=args.telemetry,
         barrier_policy=args.barrier_policy,
         drift_threshold=args.drift_threshold,
         adapt_interval=args.adapt_interval,
@@ -368,7 +442,19 @@ def main() -> int:
         "pipeline_depth": args.pipeline_depth,
         "mean_overlap_fraction": float(np.mean(
             [r.overlap_fraction for r in results])) if results else None,
+        "slo_p50_s": float(np.mean(
+            [r.slo_p50 for r in results])) if results else None,
+        "slo_p99_s": float(np.mean(
+            [r.slo_p99 for r in results])) if results else None,
     }
+    if args.sampler == "online":
+        summary["population"] = {
+            "registered": int(engine.sampler.population),
+            "mean_online_pool": float(np.mean(
+                [r.online_pool for r in results])) if results else None,
+            "mean_stale_fraction": float(np.mean(
+                [r.stale_fraction for r in results])) if results else None,
+        }
     if args.device_cache_batches or args.device_cache_mb:
         summary["cache_hit_rate"] = float(np.mean(
             [r.cache_hit_rate for r in results])) if results else None

@@ -21,11 +21,13 @@ ratios), which is hardware-independent.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 __all__ = ["GPUSpec", "TaskProfile", "ClusterSpec", "GPUS", "TASKS",
            "single_node", "multi_node", "AGG_RATE_FEDAVG",
-           "AGG_RATE_FEDMEDIAN", "NET_BW", "NET_LATENCY"]
+           "AGG_RATE_FEDMEDIAN", "NET_BW", "NET_LATENCY",
+           "AvailabilityTrace", "REGIONS"]
 
 NET_BW = 1.25e9          # bytes/s (10 GbE)
 NET_LATENCY = 5e-3       # s per message
@@ -89,6 +91,52 @@ TASKS = {
     "mlm": TaskProfile("mlm", 60.37e6, 2.0, int(3.3 * 2**30), 0.06,
                        {"a40": 14, "2080ti": 3},
                        util_u1=0.2228, util_beta=0.488),
+}
+
+
+# -- client availability (open-world population) ------------------------------
+# FedScale / pfl-research both argue that realistic availability traces are
+# what make simulator results generalize: devices come online in diurnal
+# waves, phase-shifted per region.  The trace is the *rate* half of the
+# population model — which individual clients are online is decided by the
+# nested-threshold rule in repro.population.arrival (stable, deterministic
+# membership: a client stays online while its hash phase is below the rate).
+
+@dataclass(frozen=True)
+class AvailabilityTrace:
+    """Diurnal online-fraction curve for one region of the population.
+
+    ``online_fraction(t) = clip(base + amplitude * sin(2*pi*(t/period +
+    phase)))`` — ``period`` is in rounds (one simulated day), ``phase`` is
+    the region's timezone offset as a fraction of a period, and ``weight``
+    is the region's share of the registered population.
+    """
+
+    name: str
+    weight: float            # share of the registered population
+    base: float              # mean online fraction
+    amplitude: float         # diurnal swing around the mean
+    phase: float             # timezone offset, fraction of a period
+    period: float = 48.0     # rounds per simulated day
+
+    def __post_init__(self):
+        if not 0.0 < self.weight <= 1.0:
+            raise ValueError("weight must be in (0, 1]")
+        if self.period <= 0:
+            raise ValueError("period must be positive")
+
+    def online_fraction(self, t: float) -> float:
+        f = self.base + self.amplitude * math.sin(
+            2.0 * math.pi * (t / self.period + self.phase))
+        return min(1.0, max(0.0, f))
+
+
+# Three phase-shifted regions (the planet in thirds): equal diurnal shape,
+# offset by a third of a day each, weights summing to 1.
+REGIONS = {
+    "amer": AvailabilityTrace("amer", 0.35, 0.45, 0.25, 0.0),
+    "emea": AvailabilityTrace("emea", 0.30, 0.45, 0.25, 1.0 / 3.0),
+    "apac": AvailabilityTrace("apac", 0.35, 0.45, 0.25, 2.0 / 3.0),
 }
 
 

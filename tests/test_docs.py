@@ -28,11 +28,36 @@ def test_architecture_doc_covers_the_machine():
     assert check_docs.check_architecture_coverage() == []
     for needle in ("Hierarchical combine", "bucket_mode", "combine_mode",
                    "Orphan-shard reclamation", "make_shard_merge_step",
-                   "discard_workers"):
+                   "discard_workers", "Open-world population",
+                   "OnlinePoolSampler"):
         assert needle in check_docs.ARCHITECTURE_NEEDLES, needle
     # linked from README and ROADMAP
     assert "ARCHITECTURE.md" in (REPO / "README.md").read_text()
     assert "ARCHITECTURE.md" in (REPO / "ROADMAP.md").read_text()
+
+
+def test_population_doc_covers_the_subsystem():
+    """docs/POPULATION.md must keep naming the registry, the arrival
+    model, the streaming sampler, the SLO metrics, and every scenario
+    storm — and it must stay reachable from README and ROADMAP."""
+    assert check_docs.check_doc_coverage() == []
+    assert "docs/POPULATION.md" in check_docs.DOC_NEEDLES
+    for needle in ("ClientMetadataStore", "ArrivalIndex",
+                   "OnlinePoolSampler", "stale_fraction", "storm catalog",
+                   "never materializes", "surge", "outage"):
+        assert needle in check_docs.POPULATION_NEEDLES, needle
+    assert "POPULATION.md" in (REPO / "README.md").read_text()
+    assert "POPULATION.md" in (REPO / "ROADMAP.md").read_text()
+
+
+def test_population_doc_catalogs_every_scenario_storm():
+    """The storm catalog documents EVERY storm control/scenarios.py can
+    run — adding a scenario without documenting it fails here."""
+    from repro.control.scenarios import SCENARIOS
+
+    doc = (REPO / "docs" / "POPULATION.md").read_text().lower()
+    for name in SCENARIOS:
+        assert name.lower() in doc, f"storm {name!r} not in POPULATION.md"
 
 
 def test_flags_markdown_lists_every_cli_flag():

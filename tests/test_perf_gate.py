@@ -42,6 +42,15 @@ def _record():
                      "compression_ratio_vs_flat": 20.0,
                      "final_loss_rel_dev_vs_tree": -0.4},
         },
+        "population": {
+            "losses_identical": True,
+            "store_peak_kb": 2.7,
+            "draws_bounded": True,
+            "stale_fraction": 0.0,
+            "slo_p50": 2.8,
+            "slo_p99": 11.5,
+            "wall_s_per_round": 0.2,
+        },
     }
 
 
@@ -105,6 +114,18 @@ def test_each_regression_class_is_caught():
         ("compressed training degraded past tolerance",
          lambda r: r["hierarchy"]["int8"].__setitem__(
              "final_loss_rel_dev_vs_tree", 0.4)),
+        ("population depths diverged",
+         lambda r: r["population"].__setitem__("losses_identical", False)),
+        ("population registry materialized",
+         lambda r: r["population"].__setitem__("store_peak_kb", 40000.0)),
+        ("population draw budget blown",
+         lambda r: r["population"].__setitem__("draws_bounded", False)),
+        ("population stale fraction regressed",
+         lambda r: r["population"].__setitem__("stale_fraction", 0.5)),
+        ("population percentiles inverted",
+         lambda r: r["population"].__setitem__("slo_p99", 1.0)),
+        ("population round time blowup",
+         lambda r: r["population"].__setitem__("wall_s_per_round", 2.0)),
     ]
     for name, mutate in cases:
         fresh = copy.deepcopy(_record())

@@ -1,0 +1,352 @@
+"""Open-world population: the hash-derived registry stays O(1) in memory,
+the nested-threshold arrival model is monotone and matches its analytic
+expectation, the streaming sampler fills cohorts with bounded draws (stale
+fill terminates for every pool state), every sampler checkpoint
+round-trips, and open-world engine runs are bit-identical across pipeline
+depths with the controller live."""
+
+import json
+import tracemalloc
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                        UniformSampler, ZipfSampler, make_placement)
+from repro.core.sampling import (PowerOfChoiceSampler, restore_sampler,
+                                 sampler_state)
+from repro.data import make_federated_dataset
+from repro.distributed import WorkerPool
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+from repro.population import (ArrivalIndex, ClientMetadataStore, Intervention,
+                              OnlinePoolSampler, PopulationDataset)
+
+
+# -- client-metadata store ----------------------------------------------------
+
+def test_store_attributes_deterministic_and_vectorized():
+    store = ClientMetadataStore(10_000, seed=3, batch_size=4)
+    cids = np.arange(0, 10_000, 97)
+    # vectorized call == scalar calls, and repeat calls are identical
+    np.testing.assert_array_equal(store.phase(cids), store.phase(cids))
+    assert store.phase(int(cids[5])) == store.phase(cids)[5]
+    assert store.region(int(cids[7])) == store.region_names[
+        int(store.region_idx(cids)[7])]
+    sizes = store.n_samples(cids)
+    assert sizes[3] == store.n_samples(int(cids[3]))
+    assert isinstance(store.n_samples(int(cids[0])), int)
+    # phases are uniform-ish on [0, 1) (hash quality sanity)
+    ph = store.phase(np.arange(10_000))
+    assert 0.0 <= ph.min() and ph.max() < 1.0
+    assert abs(ph.mean() - 0.5) < 0.02
+
+
+def test_store_sizes_floored_to_one_batch_and_clipped():
+    store = ClientMetadataStore(5_000, seed=7, batch_size=20,
+                                size_max=1_000)
+    sizes = store.n_samples(np.arange(5_000))
+    assert sizes.min() >= 20          # paper §5.1: at least one full batch
+    assert sizes.max() <= 1_000
+    batches = store.n_batches(np.arange(5_000))
+    assert batches.min() >= 1
+    np.testing.assert_array_equal(batches, np.maximum(1, sizes // 20))
+
+
+def test_store_memory_independent_of_population():
+    """Registering 1M clients must cost the same few KB as 10k — the
+    registry is hash streams, never a materialized table."""
+    def peak_kb(population):
+        tracemalloc.start()
+        store = ClientMetadataStore(population, seed=1)
+        _ = store.n_samples(np.arange(64))       # touch every stream
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        return peak / 1024
+
+    small, big = peak_kb(10_000), peak_kb(1_000_000)
+    assert big < 64, f"1M-client store peaked at {big:.1f}KB"
+    # comparative, with generous slack for allocator noise (both are ~KB)
+    assert big <= small * 8 + 8, (small, big)
+
+
+def test_store_state_round_trips_attributes():
+    store = ClientMetadataStore(4_096, seed=5, batch_size=8, size_mu=3.0)
+    clone = ClientMetadataStore.from_state(
+        json.loads(json.dumps(store.state_dict())))
+    cids = np.arange(0, 4_096, 13)
+    np.testing.assert_array_equal(store.phase(cids), clone.phase(cids))
+    np.testing.assert_array_equal(store.n_samples(cids),
+                                  clone.n_samples(cids))
+    np.testing.assert_array_equal(store.region_idx(cids),
+                                  clone.region_idx(cids))
+
+
+def test_population_dataset_grafts_sizes_not_content():
+    base = make_federated_dataset("sr", n_clients=64, input_dim=8,
+                                  batch_size=2)
+    store = ClientMetadataStore(1_000_000, seed=2, batch_size=2)
+    ds = PopulationDataset(base, store)
+    assert ds.n_clients == 1_000_000
+    assert ds.n_samples(999_999) == int(store.n_samples(999_999))
+    # content delegates to the lazy base — identical bytes for same cid
+    a = ds.client_batch(123_456, 0)
+    b = base.client_batch(123_456, 0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    with pytest.raises(ValueError, match="batch_size"):
+        PopulationDataset(base, ClientMetadataStore(100, batch_size=4))
+
+
+# -- arrival index ------------------------------------------------------------
+
+def test_nested_threshold_is_monotone_in_rate():
+    """Raising the online rate only ever ADDS clients (stable diurnal
+    membership: the same devices come back every evening)."""
+    store = ClientMetadataStore(20_000, seed=9)
+    base = ArrivalIndex(store)
+    surged = ArrivalIndex(store, interventions=(
+        Intervention("surge", 0, 1_000, 1.5),))
+    cids = np.arange(20_000)
+    for t in (0, 7, 19, 33):
+        lo, hi = base.online(cids, t), surged.online(cids, t)
+        assert not np.any(lo & ~hi), "surge dropped an online client"
+        assert hi.sum() >= lo.sum()
+
+
+def test_expected_online_matches_empirical_fraction():
+    store = ClientMetadataStore(50_000, seed=4)
+    index = ArrivalIndex(store)
+    cids = np.arange(50_000)
+    for t in (0, 11, 24, 40):
+        frac = index.online(cids, t).mean()
+        expect = index.expected_online(t) / store.population
+        assert abs(frac - expect) < 0.02, (t, frac, expect)
+
+
+def test_outage_intervention_is_region_scoped_and_windowed():
+    store = ClientMetadataStore(30_000, seed=6)
+    index = ArrivalIndex(store, interventions=(
+        Intervention("outage", 10, 20, 0.0, region="apac"),))
+    cids = np.arange(30_000)
+    apac = index.store.region_idx(cids) == list(
+        index.store.region_names).index("apac")
+    during, outside = index.online(cids, 15), index.online(cids, 25)
+    assert not np.any(during & apac), "apac client online mid-outage"
+    assert np.any(during & ~apac), "outage leaked outside its region"
+    assert np.any(outside & apac), "apac never came back"
+    assert index.online_fraction("apac", 15) == 0.0
+    assert index.online_fraction("apac", 20) > 0.0   # [start, end)
+
+
+# -- streaming sampler --------------------------------------------------------
+
+def test_sampler_fills_unique_cohort_with_bounded_draws():
+    store = ClientMetadataStore(100_000, seed=13)
+    index = ArrivalIndex(store)
+    s = OnlinePoolSampler(index, 64, seed=13)
+    cohort = s.sample(0)
+    assert len(cohort) == 64 == len(set(cohort.tolist()))
+    assert s.last_stats["draws"] <= s.max_draw_factor * 64
+    assert s.last_stats["stale_fraction"] == 0.0
+    assert s.last_stats["online_pool"] == index.expected_online(0)
+    # probes are O(cohort), not O(population)
+    assert index.probes <= s.max_draw_factor * 64
+
+
+def test_sampler_blackout_stale_fills_deterministically():
+    """All clients offline: the cohort still fills (unique, stale 1.0),
+    terminates, and two identically-seeded samplers agree bit-for-bit."""
+    def draw():
+        store = ClientMetadataStore(1_000, seed=21)
+        index = ArrivalIndex(store, interventions=(
+            Intervention("outage", 0, 10**6, 0.0),))
+        s = OnlinePoolSampler(index, 32, seed=21)
+        return s.sample(5), s.last_stats
+
+    (a, stats), (b, _) = draw(), draw()
+    assert stats["stale_fraction"] == 1.0 and stats["online"] == 0
+    assert len(set(a.tolist())) == 32
+    np.testing.assert_array_equal(a, b)
+
+
+def test_sampler_cohort_larger_than_population_wraps():
+    store = ClientMetadataStore(8, seed=2)
+    index = ArrivalIndex(store)
+    s = OnlinePoolSampler(index, 16, seed=2)
+    cohort = s.sample(0)
+    assert len(cohort) == 16
+    assert cohort.min() >= 0 and cohort.max() < 8
+
+
+# -- checkpoint round-trips, all samplers -------------------------------------
+
+def test_every_sampler_kind_checkpoint_round_trips():
+    """uniform / zipf / poc / online: JSON-serialized sampler_state restores
+    a sampler whose subsequent draws are bit-identical."""
+    def online():
+        store = ClientMetadataStore(10_000, seed=17)
+        return OnlinePoolSampler(
+            ArrivalIndex(store, interventions=(
+                Intervention("surge", 2, 9, 1.3, region="emea"),)),
+            16, seed=17)
+
+    makers = (lambda: UniformSampler(500, 8, seed=5),
+              lambda: ZipfSampler(500, 8, a=1.4, seed=5),
+              lambda: PowerOfChoiceSampler(500, 8, seed=5),
+              online)
+    for make in makers:
+        s = make()
+        s.sample(0)
+        state = json.loads(json.dumps(sampler_state(s)))
+        expect = [s.sample(t) for t in range(1, 4)]
+        r = restore_sampler(state)
+        for t, want in zip(range(1, 4), expect):
+            np.testing.assert_array_equal(r.sample(t), want)
+    # the online state embeds the full arrival config
+    st = sampler_state(online())
+    assert st["kind"] == "online" and "index" in st
+    assert st["index"]["interventions"][0]["region"] == "emea"
+
+
+def test_power_of_choice_signature_matches_other_samplers():
+    """Regression: ``sample(round_idx)`` must work with NO oracle (uniform
+    degenerate pick), the ctor oracle must equal the per-call oracle, and
+    the oracle must still select the top-loss clients."""
+    uniform = PowerOfChoiceSampler(200, 8, seed=3).sample(0)
+    assert len(uniform) == 8
+    oracle = lambda cid: float(cid)          # noqa: E731 — loss == id
+    by_ctor = PowerOfChoiceSampler(200, 8, seed=3,
+                                   client_loss=oracle).sample(0)
+    by_call = PowerOfChoiceSampler(200, 8, seed=3).sample(0, oracle)
+    np.testing.assert_array_equal(by_ctor, by_call)
+    # top-loss selection: the chosen 8 are the largest ids of the d drawn
+    cand = PowerOfChoiceSampler(200, 8, seed=3).rng.choice(
+        200, size=16, replace=False)
+    assert sorted(by_ctor.tolist()) == sorted(cand.tolist())[-8:]
+
+
+# -- engine integration -------------------------------------------------------
+
+def _engine(depth, *, population=4_096, cohort=16, seed=11,
+            drift_threshold=0.0, ckpt=None, placement="lb",
+            rounds_per_checkpoint=25):
+    base = make_federated_dataset("sr", n_clients=256, input_dim=16,
+                                  batch_size=4)
+    store = ClientMetadataStore(population, seed=seed, batch_size=4)
+    sampler = OnlinePoolSampler(ArrivalIndex(store), cohort, seed=seed)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=1)
+    eng = FederatedEngine(
+        dataset=PopulationDataset(base, store), loss_fn=loss,
+        init_params=params, optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement(placement), sampler=sampler,
+        pool=WorkerPool.homogeneous(3, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(seed=seed),
+        config=EngineConfig(steps_cap=4, batch_size=4, pipeline_depth=depth,
+                            drift_threshold=drift_threshold,
+                            rounds_per_checkpoint=rounds_per_checkpoint),
+        checkpoint_store=ckpt)
+    return eng
+
+
+def test_open_world_losses_bit_identical_across_depths_with_controller():
+    results = {}
+    for depth in (0, 1, 2):
+        res = _engine(depth, population=100_000,
+                      drift_threshold=0.6).run(4)
+        results[depth] = res
+    losses = {d: [r.loss for r in rs] for d, rs in results.items()}
+    assert losses[0] == losses[1] == losses[2], losses
+    # SLO metrics populated identically at every depth
+    for r0, r1, r2 in zip(*results.values()):
+        assert r0.slo_p99 >= r0.slo_p50 > 0.0
+        assert 0.0 <= r0.stale_fraction <= 1.0
+        assert r0.online_pool > 0.0
+        assert (r0.slo_p50, r0.slo_p99, r0.stale_fraction, r0.online_pool) \
+            == (r1.slo_p50, r1.slo_p99, r1.stale_fraction, r1.online_pool) \
+            == (r2.slo_p50, r2.slo_p99, r2.stale_fraction, r2.online_pool)
+
+
+def test_million_client_round_is_o_cohort():
+    """A 64-client round over a 1M-client registry: the population stack
+    costs the same memory as a 10k one, and the sampler probes O(cohort)
+    ids per round."""
+    base = make_federated_dataset("sr", n_clients=256, input_dim=16,
+                                  batch_size=4)
+
+    def stack_peak_kb(population):
+        tracemalloc.start()
+        store = ClientMetadataStore(population, seed=11, batch_size=4)
+        sampler = OnlinePoolSampler(ArrivalIndex(store), 64, seed=11)
+        ds = PopulationDataset(base, store)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        return peak / 1024, sampler, ds
+
+    small, _, _ = stack_peak_kb(10_000)
+    big, sampler, ds = stack_peak_kb(1_000_000)
+    assert big < 64 and big <= small * 8 + 8, (small, big)
+
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=1)
+    eng = FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9), placement=make_placement("lb"),
+        sampler=sampler,
+        pool=WorkerPool.homogeneous(3, type_name="a40", concurrency=2),
+        telemetry=SyntheticTelemetry(seed=11),
+        config=EngineConfig(steps_cap=4, batch_size=4, pipeline_depth=0))
+    res = eng.run(2)
+    assert all(r.n_clients == 64 for r in res)
+    assert sampler.index.probes <= 2 * sampler.max_draw_factor * 64
+
+
+def test_checkpoint_resume_replays_online_stream(tmp_path):
+    """A resumed open-world run continues the exact sampler stream: the
+    checkpointed state (store config, traces, RNG position) overrides the
+    restoring process's sampler and round 4 is bit-identical."""
+    from repro.checkpoint import CheckpointStore
+
+    a = _engine(1, placement="rr", rounds_per_checkpoint=2,
+                ckpt=CheckpointStore(str(tmp_path)))
+    whole = a.run(5)                       # checkpoints at rounds 2 and 4
+    b = _engine(1, placement="rr", rounds_per_checkpoint=2,
+                ckpt=CheckpointStore(str(tmp_path)))
+    b.sampler = OnlinePoolSampler(         # "wrong" sampler on the resume
+        ArrivalIndex(ClientMetadataStore(4_096, seed=999, batch_size=4)),
+        16, seed=999)
+    assert b.restore_latest()
+    assert b.round_idx == 4
+    assert isinstance(b.sampler, OnlinePoolSampler)
+    assert b.sampler.seed == 11            # checkpoint config wins
+    res = b.run(1)
+    assert res[0].loss == whole[4].loss
+    assert res[0].n_clients == whole[4].n_clients
+    assert res[0].online_pool == whole[4].online_pool
+
+
+# -- scenario storms ----------------------------------------------------------
+
+def test_surge_storm_swells_pool_without_false_drift():
+    from repro.control.scenarios import run_scenario
+
+    out = run_scenario("surge")
+    assert out["pool_gain_x"] == pytest.approx(1.5, abs=0.1)
+    assert out["false_drifts"] == 0 and out["fallback_rounds"] == 0
+    assert out["audit_violations"] == 0
+    assert out["stale_peak"] == 0.0
+    # O(cohort) probes per round, not O(population)
+    assert out["probes_per_round"] < 16 * 64
+
+
+def test_outage_storm_drops_and_recovers_pool():
+    from repro.control.scenarios import run_scenario
+
+    out = run_scenario("outage")
+    assert 0.2 < out["pool_drop_fraction"] < 0.5   # apac's ~1/3 share
+    assert out["recovered"], out
+    assert out["false_drifts"] == 0 and out["audit_violations"] == 0
+    # deterministic: a second run reproduces the numbers exactly
+    assert run_scenario("outage") == out

@@ -3,16 +3,17 @@
 Three checks, all zero-dependency beyond the repo itself:
 
 1. **Markdown link check** — every relative link in the repo's markdown
-   files must resolve to an existing file (anchors are stripped; http(s)
-   and mailto links are not fetched).  Catches renamed/moved docs.
+   files (top level plus everything under ``docs/``, recursively) must
+   resolve to an existing file (anchors are stripped; http(s) and mailto
+   links are not fetched).  Catches renamed/moved docs.
 2. **Flag-reference freshness** — the README section between
    ``<!-- flags:begin -->`` / ``<!-- flags:end -->`` must equal the output
    of ``python -m repro.launch.train --print-flags-md`` exactly.  The
    table is generated, never hand-edited, so CLI and docs cannot drift.
-3. **Architecture coverage** — ``docs/ARCHITECTURE.md`` must keep naming
-   the subsystems and invariants it exists to explain (the needle list
-   below); a rename or removed section must update the doc, not orphan
-   it.  ``tests/test_docs.py`` asserts the same list in tier-1.
+3. **Doc coverage** — each doc in ``DOC_NEEDLES`` must keep naming the
+   subsystems and invariants it exists to explain; a rename or removed
+   section must update the doc, not orphan it.  ``tests/test_docs.py``
+   asserts the same lists in tier-1.
 
 Usage::
 
@@ -27,7 +28,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 MD_FILES = sorted(
-    list(REPO.glob("*.md")) + list((REPO / "docs").glob("*.md")))
+    list(REPO.glob("*.md")) + list((REPO / "docs").rglob("*.md")))
 LINK_RX = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 BEGIN, END = "<!-- flags:begin -->", "<!-- flags:end -->"
 
@@ -46,14 +47,46 @@ ARCHITECTURE_NEEDLES = (
     # feedback, fused dequant-merge kernel, checkpointed residuals)
     "Compressed combine", "combine_compress", "error feedback",
     "CombineCompressor", "dequant-merge", "residual_norm",
+    # the open-world population layer (streaming registry + SLO metrics)
+    "Open-world population", "OnlinePoolSampler", "ArrivalIndex",
+    "stale_fraction", "never materializes",
 )
+
+# What docs/POPULATION.md must keep covering: the registry's hash streams,
+# the arrival model, the streaming sampler's lifecycle and checkpoint
+# story, the SLO metric definitions, and the full scenario-storm catalog.
+POPULATION_NEEDLES = (
+    "ClientMetadataStore", "ArrivalIndex", "OnlinePoolSampler",
+    "PopulationDataset", "splitmix64", "diurnal", "rejection",
+    "stale_fraction", "slo_p50", "slo_p99", "online_pool",
+    "expected_online", "sampler_state", "never materializes",
+    "storm catalog", "surge", "outage", "straggler", "fail", "skew",
+    "adapt",
+)
+
+# doc path (relative to the repo root) -> needles it must keep naming
+DOC_NEEDLES = {
+    "docs/ARCHITECTURE.md": ARCHITECTURE_NEEDLES,
+    "docs/POPULATION.md": POPULATION_NEEDLES,
+}
+
+
+def check_doc_coverage() -> list[str]:
+    errors = []
+    for rel, needles in DOC_NEEDLES.items():
+        path = REPO / rel
+        if not path.exists():
+            errors.append(f"{rel}: missing (coverage-enforced doc)")
+            continue
+        low = path.read_text(encoding="utf-8").lower()
+        errors.extend(f"{rel}: no longer mentions {needle!r}"
+                      for needle in needles if needle.lower() not in low)
+    return errors
 
 
 def check_architecture_coverage() -> list[str]:
-    doc = (REPO / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
-    low = doc.lower()
-    return [f"docs/ARCHITECTURE.md: no longer mentions {needle!r}"
-            for needle in ARCHITECTURE_NEEDLES if needle.lower() not in low]
+    return [e for e in check_doc_coverage()
+            if e.startswith("docs/ARCHITECTURE.md")]
 
 
 def check_links() -> list[str]:
@@ -90,7 +123,7 @@ def check_flags_section() -> list[str]:
 
 def main() -> int:
     errors = (check_links() + check_flags_section()
-              + check_architecture_coverage())
+              + check_doc_coverage())
     for e in errors:
         print(f"FAIL {e}")
     if not errors:
