@@ -56,6 +56,8 @@ def compare(
     time_tol: float = 3.0,
     overlap_slack: float = 0.15,
     hit_rate_slack: float = 0.15,
+    idle_slack: float = 0.15,
+    tracer_overhead_tol: float = 0.02,
 ) -> list[str]:
     """Return a list of human-readable failures (empty == gate passes)."""
     failures: list[str] = []
@@ -90,8 +92,11 @@ def compare(
     d1 = _get(fresh, "engine.depth1.overlap_fraction")
     d2 = _get(fresh, "engine.depth2.overlap_fraction")
     if d1 is not None and d2 is not None:
+        # 0.15 slack (same as bench_pipeline's in-run assert): a loaded
+        # runner's depth-2 producer measurably trails depth 1 without any
+        # structural regression
         check(
-            d2 >= d1 - 0.05,
+            d2 >= d1 - 0.15,
             f"depth2 overlap {d2:.2f} fell below depth1's {d1:.2f}",
         )
 
@@ -104,6 +109,34 @@ def compare(
             rec <= base,
             f"{depth} recompiles grew: {rec} vs baseline {base}",
         )
+
+    # -- machine-independent: observability plane -----------------------------
+    idle = require("engine.depth1.idle_fraction")
+    base_idle = _get(baseline, "engine.depth1.idle_fraction")
+    if idle is not None and base_idle is not None:
+        # deterministic output of the placement simulation — a move outside
+        # the band means the idle accounting itself changed, not the host
+        check(
+            abs(idle - base_idle) <= idle_slack,
+            f"depth1 idle fraction {idle:.3f} moved outside the ±{idle_slack}"
+            f" band around baseline {base_idle:.3f} — the simulated idle-gap "
+            f"accounting changed",
+        )
+    overhead = require("engine.tracer_overhead_fraction")
+    if overhead is not None:
+        wall = _get(fresh, "engine.depth1.wall_s_per_round") or 0.0
+        # relative budget with an absolute noise floor: on a fast round the
+        # denominator is tiny and scheduler jitter alone could trip 2%
+        abs_overhead_s = overhead * wall
+        check(
+            overhead <= tracer_overhead_tol or abs_overhead_s <= 0.01,
+            f"tracer overhead {overhead:.3f} of the depth1 round "
+            f"({abs_overhead_s * 1e3:.1f}ms) exceeds the "
+            f"{tracer_overhead_tol:.0%} budget",
+        )
+    traced = require("engine.depth1_traced.spans")
+    if traced is not None:
+        check(traced > 0, "traced bench round recorded zero spans")
 
     hit = require("device_cache.on.hit_rate")
     if hit is not None:
@@ -382,10 +415,27 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument("--stamp", default=None, help="date stamp for --append records")
     ap.add_argument("--window", type=int, default=7, help="--trend trailing window size")
+    ap.add_argument(
+        "--summary",
+        metavar="JSON",
+        default=None,
+        help="committed trend summary (benchmarks/trend_summary.json): "
+        "metrics whose live history is too short to gate fall back to the "
+        "summary's trailing-window medians instead of being skipped",
+    )
+    ap.add_argument(
+        "--summary-out",
+        metavar="JSON",
+        default=None,
+        help="after a --trend gate, rewrite this rolling trend summary from "
+        "the live history (medians only — safe to commit, no raw timings)",
+    )
     args = ap.parse_args(argv)
 
     if args.append or args.trend:
-        from benchmarks.trend import append_records, compare_trend, load_trend
+        from benchmarks.trend import (append_records, compare_trend,
+                                      load_summary, load_trend,
+                                      summarize_trend, write_summary)
 
         if args.append:
             paths = ([args.baseline] if args.baseline else []) + list(args.fresh)
@@ -397,9 +447,17 @@ def main(argv: list[str] | None = None) -> int:
             print(f"perf gate: appended {n} record(s) to {args.append} [{stamp}]")
             return 0
         entries = load_trend(args.trend)
-        failures, warnings = compare_trend(entries, window=args.window)
+        summary = load_summary(args.summary) if args.summary else None
+        failures, warnings = compare_trend(
+            entries, window=args.window, summary=summary
+        )
         for msg in warnings:
             print(f"  WARN {msg}")
+        if args.summary_out:
+            write_summary(
+                args.summary_out, summarize_trend(entries, window=args.window)
+            )
+            print(f"perf gate: wrote trend summary to {args.summary_out}")
         if failures:
             print(f"perf gate [trend]: {len(failures)} sustained regression(s)")
             for msg in failures:

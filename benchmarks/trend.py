@@ -32,7 +32,15 @@ from __future__ import annotations
 import json
 from statistics import median
 
-__all__ = ["TREND_METRICS", "load_trend", "append_records", "compare_trend"]
+__all__ = [
+    "TREND_METRICS",
+    "load_trend",
+    "append_records",
+    "compare_trend",
+    "summarize_trend",
+    "load_summary",
+    "write_summary",
+]
 
 # (dotted path into the benchmark record, mode, tolerance)
 TREND_METRICS: dict = {
@@ -41,6 +49,10 @@ TREND_METRICS: dict = {
         ("engine.depth1.wall_s_per_round", "band", 2.0),
         ("engine.depth1.overlap_fraction", "floor", 0.15),
         ("engine.depth2.overlap_fraction", "floor", 0.15),
+        # deterministic placement-simulation output: rising idle means the
+        # schedule got worse (or the accounting changed), not runner noise
+        ("engine.depth1.idle_fraction", "count", 0.15),
+        ("engine.tracer_overhead_fraction", "count", 0.02),
         ("device_cache.on.hit_rate", "floor", 0.10),
         ("mesh.shards2.hit_rate", "floor", 0.10),
         ("engine.depth1.recompiles", "count", 0),
@@ -129,13 +141,62 @@ def _breach(value, med, mode: str, tol: float) -> bool:
     return value > med + tol  # "count"
 
 
-def compare_trend(entries: list[dict], *, window: int = 7) -> tuple[list[str], list[str]]:
+def summarize_trend(entries: list[dict], *, window: int = 7) -> dict:
+    """Condense a trend history to its trailing-window medians.
+
+    The result is tiny and machine-independent-ish (medians only, no raw
+    per-run rows), so it is safe to COMMIT as
+    ``benchmarks/trend_summary.json`` — the nightly lane regenerates it
+    and :func:`compare_trend` falls back to it when the live history is
+    too short (a cold CI cache would otherwise erase the trend's memory).
+    """
+    by_kind: dict[str, list[dict]] = {}
+    for e in entries:
+        by_kind.setdefault(e.get("benchmark", "pipeline"), []).append(e)
+    kinds: dict = {}
+    for kind, metrics in TREND_METRICS.items():
+        series = by_kind.get(kind, [])
+        if not series:
+            continue
+        history = [e["record"] for e in series[-window:]]
+        paths: dict = {}
+        for path, _mode, _tol in metrics:
+            past = [v for v in (_get(r, path) for r in history) if v is not None]
+            if past:
+                paths[path] = {"median": median(past), "n": len(past)}
+        if paths:
+            kinds[kind] = paths
+    return {"window": window, "kinds": kinds}
+
+
+def load_summary(path: str) -> dict | None:
+    """Read a committed trend summary; missing/garbled files are None (the
+    gate then simply has no fallback, which is the pre-summary behavior)."""
+    try:
+        with open(path) as f:
+            out = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+    return out if isinstance(out, dict) and "kinds" in out else None
+
+
+def write_summary(path: str, summary: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def compare_trend(
+    entries: list[dict], *, window: int = 7, summary: dict | None = None
+) -> tuple[list[str], list[str]]:
     """Gate the newest record of each benchmark kind against its history.
 
     Returns ``(failures, warnings)``: a metric that breaches the trailing
     window median in BOTH of the two newest records is a failure
     (sustained); in the newest only, a warning.  Kinds with fewer than
-    three records pass trivially.
+    three live records pass trivially — unless a committed ``summary``
+    (:func:`summarize_trend` output) supplies medians, in which case the
+    short history is gated against those instead of being skipped.
     """
     failures: list[str] = []
     warnings: list[str] = []
@@ -144,7 +205,39 @@ def compare_trend(entries: list[dict], *, window: int = 7) -> tuple[list[str], l
         by_kind.setdefault(e.get("benchmark", "pipeline"), []).append(e)
     for kind, metrics in TREND_METRICS.items():
         series = by_kind.get(kind, [])
+        summary_meds = (summary or {}).get("kinds", {}).get(kind, {})
         if len(series) < 3:
+            if not series or not summary_meds:
+                continue
+            # short live history, committed summary available: gate against
+            # the summary's medians so a cold cache keeps the trend's memory
+            newest = series[-1]["record"]
+            prev = series[-2]["record"] if len(series) >= 2 else None
+            for path, mode, tol in metrics:
+                entry = summary_meds.get(path)
+                if entry is None:
+                    continue
+                med = entry["median"]
+                vn = _get(newest, path)
+                if vn is None:
+                    failures.append(f"{kind}: newest record is missing {path!r}")
+                    continue
+                hit_now = _breach(vn, med, mode, tol)
+                hit_prev = prev is not None and _breach(
+                    _get(prev, path), med, mode, tol
+                )
+                if hit_now and hit_prev:
+                    failures.append(
+                        f"{kind}: {path} sustained regression — newest {vn:g} "
+                        f"vs committed summary median {med:g} ({mode}, tol "
+                        f"{tol:g}) in the last two runs"
+                    )
+                elif hit_now:
+                    warnings.append(
+                        f"{kind}: {path} newest {vn:g} breaches committed "
+                        f"summary median {med:g} ({mode}, tol {tol:g}) — "
+                        f"watching for a repeat"
+                    )
             continue
         newest, prev = series[-1]["record"], series[-2]["record"]
         history = [e["record"] for e in series[-(window + 1) : -1]]

@@ -134,6 +134,42 @@ class AdaptiveConcurrency:
         self.trajectory.append((round_idx, tname, old, new))
         return [(tname, old, new)]
 
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot: knob states, trajectory, and the open
+        throughput window (so a restored climber closes the same window the
+        uninterrupted run would have)."""
+        return {
+            "states": {
+                t: [s.slots, s.direction, s.prev_score, s.best_slots, s.best_score]
+                for t, s in self.states.items()
+            },
+            "trajectory": [list(e) for e in self.trajectory],
+            "updates": self.updates,
+            "window": list(self._window),
+            "turn": self._turn,
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Checkpoint restore: adopt a snapshot taken by :meth:`state_dict`.
+        The caller re-applies the restored slot counts to its worker pool
+        (pool concurrency is live state, not part of this snapshot)."""
+        self.states = {
+            str(t): SlotState(
+                slots=int(v[0]),
+                direction=int(v[1]),
+                prev_score=None if v[2] is None else float(v[2]),
+                best_slots=int(v[3]),
+                best_score=float(v[4]),
+            )
+            for t, v in (state.get("states") or {}).items()
+        }
+        self._order = sorted(self.states)
+        self.trajectory = [tuple(e) for e in state.get("trajectory") or []]
+        self.updates = int(state.get("updates", 0))
+        self._window = [float(x) for x in state.get("window") or []]
+        self._turn = int(state.get("turn", 0))
+
     # -- reading -------------------------------------------------------------
     def slots_for(self, type_name: str) -> int | None:
         st = self.states.get(type_name)

@@ -345,17 +345,66 @@ class ControlPlane:
             self.measured.abort()
 
     def reset(self, round_idx: int) -> None:
-        """Checkpoint restore: the rounds about to replay already fed every
-        feedback path once — drop pending measured rows, drift evidence,
-        and the open throughput window, or the replay double-counts them.
-        (Controller state is re-warmed, not checkpointed; ROADMAP records
-        the persist-and-resume follow-on.)"""
+        """Checkpoint restore WITHOUT a persisted controller snapshot (the
+        fallback path — :meth:`load_state` is the exact resume): the rounds
+        about to replay already fed every feedback path once — drop pending
+        measured rows, drift evidence, and the open throughput window, or
+        the replay double-counts them."""
         if self.measured is not None:
             self.measured.reset(round_idx)
         if self.drift is not None:
             self.drift.reset_all(round_idx)
         if self.autoconc is not None:
             self.autoconc.restart_window()
+
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of the whole control loop, taken producer-side
+        at the end of a round's prep (after every control mutation of that
+        round).  The engine adopts it at finish time and persists it in the
+        checkpoint's aux sidecar, so a restore resumes drift EWMAs
+        mid-hysteresis, the slot-count trajectory, and the pending measured
+        rows — instead of re-warming from zero."""
+        state: dict = {
+            "fallback_rounds": self.fallback_rounds,
+            "cache_rebalances": self.cache_rebalances,
+            "worker_residuals": {
+                str(int(w)): float(e) for w, e in self.worker_residuals.items()
+            },
+            "dead_wids": sorted(int(w) for w in self._dead_wids),
+        }
+        if self.drift is not None:
+            state["drift"] = self.drift.state_dict()
+        if self.autoconc is not None:
+            state["autoconc"] = self.autoconc.state_dict()
+        if self.measured is not None:
+            state["measured"] = self.measured.state_dict()
+        return state
+
+    def load_state(self, state: dict, round_idx: int) -> None:
+        """Checkpoint restore into a run resuming at ``round_idx``: adopt a
+        :meth:`state_dict` snapshot.  Restored slot counts are re-applied to
+        the worker pool (pool concurrency is live state the checkpoint does
+        not carry); consumer-side rows recorded after the snapshot was taken
+        (at most the in-flight pipeline depth's worth) are gone — strictly
+        less loss than :meth:`reset`, which drops everything."""
+        self.fallback_rounds = int(state.get("fallback_rounds", 0))
+        self.cache_rebalances = int(state.get("cache_rebalances", 0))
+        self.worker_residuals = {
+            int(w): float(e) for w, e in (state.get("worker_residuals") or {}).items()
+        }
+        self._dead_wids = {int(w) for w in state.get("dead_wids") or []}
+        if self.drift is not None and state.get("drift") is not None:
+            self.drift.load_state(state["drift"])
+        if self.autoconc is not None and state.get("autoconc") is not None:
+            self.autoconc.load_state(state["autoconc"])
+            for key, st in self.autoconc.states.items():
+                self._apply_slots(key, st.slots)
+        if self.measured is not None:
+            if state.get("measured") is not None:
+                self.measured.load_state(state["measured"], round_idx)
+            else:
+                self.measured.reset(round_idx)
 
     # -- reading -------------------------------------------------------------
     @property

@@ -104,6 +104,31 @@ class DriftDetector:
         for tname in list(self.states):
             self.reset(tname, round_idx)
 
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of every type's EWMA state (mid-hysteresis
+        included: a drifted type resumes drifted, with its episode round)."""
+        return {
+            "states": {
+                t: [s.ewma, s.n, s.drifted, s.since_round]
+                for t, s in self.states.items()
+            },
+            "events": [list(e) for e in self.events],
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Checkpoint restore: adopt a snapshot taken by :meth:`state_dict`."""
+        self.states = {
+            str(t): DriftState(
+                ewma=float(v[0]),
+                n=int(v[1]),
+                drifted=bool(v[2]),
+                since_round=int(v[3]),
+            )
+            for t, v in (state.get("states") or {}).items()
+        }
+        self.events = [tuple(e) for e in state.get("events") or []]
+
     # -- reading -------------------------------------------------------------
     @property
     def drifted(self) -> bool:

@@ -289,6 +289,60 @@ class MeasuredTelemetry:
             self.finish_seq = {}
             self.prep_seq = {}
 
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of the pending buffers and finish marker,
+        taken under the lock (the producer snapshots while the consumer may
+        be recording).  The audit journal and sequence counters are NOT
+        persisted — they describe this process's timeline, and a restored
+        run starts a fresh one (same as :meth:`reset`)."""
+        with self._cond:
+            return {
+                "last_finished": self.last_finished,
+                "pending_rows": [list(r) for r in self._pending_rows],
+                "pending_meta": [list(m) for m in self._pending_meta],
+                "pending_workers": [list(w) for w in self._pending_workers],
+            }
+
+    def load_state(self, state: dict, round_idx: int) -> None:
+        """Checkpoint restore into a run resuming at ``round_idx``: reload
+        the pending (recorded-but-unflushed) buffers so the next flush
+        releases them instead of refitting on a hole, drop any row from a
+        round that will re-run (>= ``round_idx`` — it would double-count
+        when the replay re-records it), and restart the audit journal."""
+        with self._cond:
+            self._pending_rows = [
+                (int(r[0]), str(r[1]), float(r[2]), float(r[3]))
+                for r in state.get("pending_rows") or []
+                if int(r[0]) < round_idx
+            ]
+            self._pending_meta = [
+                (int(m[0]), float(m[1]), int(m[2]), int(m[3]))
+                for m in state.get("pending_meta") or []
+                if int(m[0]) < round_idx
+            ]
+            self._pending_workers = [
+                (int(w[0]), int(w[1]), str(w[2]), float(w[3]), float(w[4]))
+                for w in state.get("pending_workers") or []
+                if int(w[0]) < round_idx
+            ]
+            self._aborted = False
+            # Sequential consumer: every round before the restore point is
+            # finished by definition (the snapshot's own marker may lag it
+            # at depth > 1).
+            self.last_finished = round_idx - 1
+            self.audit = []
+            # Retained pending rows were recorded at their round's finish,
+            # before the snapshot: seed their finish marker at seq 0 (every
+            # live seq is >= 1) so the flush that releases them after the
+            # restore doesn't read as releasing a round that never finished.
+            self.finish_seq = {
+                r: 0
+                for r in {row[0] for row in self._pending_rows}
+                | {m[0] for m in self._pending_meta}
+                | {w[0] for w in self._pending_workers}
+            }
+            self.prep_seq = {}
+
     @property
     def stall_fraction(self) -> float:
         return self.stalls / self.flushes if self.flushes else 0.0

@@ -105,6 +105,7 @@ s = 2^k + 1 — and ~1.2x in expectation for uniformly-landing S).
 
 from __future__ import annotations
 
+import json
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
@@ -129,6 +130,7 @@ from repro.fl.round import (StepCompileCache, make_combine_step,
                             make_gather_round_step, make_round_step,
                             make_shard_merge_step, make_worker_round_step)
 from repro.fl.strategy import FedAvg, Strategy
+from repro.obs import NULL_TRACER, critique_round
 
 
 def s_bucket(s: int, *, base: int = 8) -> int:
@@ -215,6 +217,13 @@ class RoundResult:
     #                                (the online pool could not fill it)
     online_pool: float = 0.0       # expected online-pool size at sample time
     #                                (0 for closed-registry samplers)
+    # -- round critique (repro.obs; see docs/OBSERVABILITY.md) -------------
+    idle_fraction: float = 0.0     # simulated worker-seconds left idle:
+    #                                idle_time / (makespan * n_workers) —
+    #                                deterministic, so the perf gate bands it
+    critical_path: str = ""        # stage bounding this round's wall time:
+    #                                exec | pack | barrier | combine
+    #                                (timing-derived, like exec_time)
 
 
 @dataclass
@@ -379,6 +388,9 @@ class _PreparedRound:
     telemetry_st: dict | None = None  # synthetic-telemetry RNG snapshot
     exec_t0: float = 0.0     # consumer-set: execution dispatch timestamp
     exec_s: float = 0.0      # measured execution wall time (consumer-set)
+    combine_t0: float = 0.0  # consumer-set: cross-shard combine dispatch
+    combine_s: float = 0.0   # measured combine wall (dispatch -> loss sync)
+    control_st: dict | None = None  # control-plane snapshot after this prep
     # -- mesh execution (per-worker device programs) -----------------------
     worker_programs: list | None = None
     # [(wid, type_name, shard, device_arrays, cache_plan, xs, pred_s)]
@@ -403,7 +415,7 @@ class FederatedEngine:
     def __init__(self, *, dataset, loss_fn, init_params, optimizer, placement: Placement,
                  sampler, pool, telemetry=None, strategy: Strategy | None = None,
                  config: EngineConfig | None = None, checkpoint_store=None,
-                 eval_fn=None):
+                 eval_fn=None, obs=None):
         # None-defaults: dataclass instances must be per-engine, or telemetry
         # counters / config mutations would leak across engines.
         strategy = FedAvg() if strategy is None else strategy
@@ -429,6 +441,16 @@ class FederatedEngine:
         self._pack_buffers = PackBuffers(depth=config.pipeline_depth + 1)
         self._sampler_ckpt_state = None
         self._telemetry_ckpt_state = None
+        self._control_ckpt_state = None
+        # Observability bundle (repro.obs).  The tracer is threaded through
+        # the full round lifecycle unconditionally; when no bundle rides
+        # along every site hits the constant-time NULL_TRACER no-ops, and
+        # span bookkeeping never touches an RNG path either way — losses
+        # are bit-identical with tracing on or off (test-enforced).
+        self.obs = obs
+        self._tracer = obs.tracer if obs is not None else NULL_TRACER
+        self._metrics = obs.metrics if obs is not None else None
+        self._ctl_log_seen = 0
         if config.control_enabled:
             # Deferred import: repro.control imports repro.core.placement,
             # so a module-level import here would cycle through the package.
@@ -585,6 +607,23 @@ class FederatedEngine:
             ThreadPoolExecutor(max_workers=self._mesh_shards,
                                thread_name_prefix="pollen-sync")
             if self._mesh_shards else None)
+        if obs is not None:
+            # Compile-event instants: every step cache reports fresh
+            # lowerings to the tracer (labelled by cache role), and the
+            # device cache books its producer-side plan() as a span.
+            for label, cache in (("round_step", self._round_step),
+                                 ("gather_step", self._gather_step),
+                                 ("worker_step", self._worker_step),
+                                 ("combine_step", self._combine_step),
+                                 ("merge_step", self._merge_step),
+                                 ("encode_step", self._encode_step),
+                                 ("compressed_combine_step",
+                                  self._compressed_combine_step)):
+                if cache is not None:
+                    cache.tracer = self._tracer
+                    cache.trace_label = label
+            if self._device_cache is not None:
+                self._device_cache.tracer = self._tracer
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -742,6 +781,7 @@ class FederatedEngine:
         the results list.
         """
         tp0 = time.perf_counter()
+        tr = self._tracer
         fired = self.pool.advance_to(t)
         ctl = self.control
         stall_s, fallback = 0.0, False
@@ -753,7 +793,8 @@ class FederatedEngine:
             # until round t-2 has finished executing), update drift stats,
             # and apply any pending slot-count move to the pool — all before
             # the snapshot/refit below, all in strict round order.
-            pre = ctl.pre_round(t)
+            with tr.span("prep.barrier", t=t):
+                pre = ctl.pre_round(t)
             stall_s, fallback = pre.stall_s, pre.fallback
         workers = self.pool.snapshot()
         if isinstance(self.placement, LearningBasedPlacement):
@@ -763,8 +804,10 @@ class FederatedEngine:
             # enforces the data <= t-2 cutoff.  Fitting here — not in the
             # consumer tail — makes the model any assignment sees identical
             # across pipeline depths and across split run() calls.
-            self.placement.refit(t)
-        clients = self._cohort(t)
+            with tr.span("prep.refit", t=t):
+                self.placement.refit(t)
+        with tr.span("prep.sample", t=t):
+            clients = self._cohort(t)
         sampler_st = sampler_state(self.sampler)
         place = (ctl.fallback_placement
                  if (fallback and ctl is not None) else self.placement)
@@ -830,6 +873,24 @@ class FederatedEngine:
         # of how far ahead the depth-pipelined producer has drawn.
         telemetry_st = (self.telemetry.state_dict()
                         if hasattr(self.telemetry, "state_dict") else None)
+        # Control-plane snapshot AFTER every producer-side control mutation
+        # of this round (pool events, barrier flush, drift update, slot
+        # moves) — adopted at finish time into the checkpoint sidecar so a
+        # restore resumes the loop mid-hysteresis instead of re-warming.
+        control_st = ctl.state_dict() if ctl is not None else None
+        if ctl is not None and tr.enabled:
+            # Controller decisions (slot moves, pool fail/join resets,
+            # cache rebalances) become instants by diffing the decision
+            # log — producer-side, so no ControlPlane API grows tracer
+            # awareness and the control path stays byte-identical.  Drift
+            # trips surface through the fallback flag below.
+            log = ctl.log
+            for rnd, kind, detail in log[self._ctl_log_seen:]:
+                tr.instant("ctl." + str(kind), round=int(rnd),
+                           detail=str(detail))
+            self._ctl_log_seen = len(log)
+            if fallback:
+                tr.instant("ctl.drift_fallback", round=t)
         plan = plan_round(assignment, workers,
                           lanes_per_worker=self.cfg.lanes_per_worker,
                           steps_cap=self.cfg.steps_cap, min_steps=1)
@@ -852,20 +913,24 @@ class FederatedEngine:
             else:
                 worker_S = [S] * plan.W
             padded = int(sum(worker_S)) * plan.P - plan.n_steps_total
-            if self._device_cache is not None:
-                arrays = build_round_masks(plan, S, buffers=self._pack_buffers)
-            else:
-                arrays = build_round_arrays(
-                    self.dataset, plan=plan,
-                    batch_size=self.cfg.batch_size, seq_len=self.cfg.seq_len,
-                    s_align=lambda s: S, buffers=self._pack_buffers)
-            worker_programs = self._pack_worker_programs(
-                t, plan, worker_S, arrays, assignment, workers, mesh_map,
-                loads)
+            with tr.span("prep.pack", t=t, S=S, W=plan.W):
+                if self._device_cache is not None:
+                    arrays = build_round_masks(plan, S,
+                                               buffers=self._pack_buffers)
+                else:
+                    arrays = build_round_arrays(
+                        self.dataset, plan=plan,
+                        batch_size=self.cfg.batch_size,
+                        seq_len=self.cfg.seq_len,
+                        s_align=lambda s: S, buffers=self._pack_buffers)
+                worker_programs = self._pack_worker_programs(
+                    t, plan, worker_S, arrays, assignment, workers,
+                    mesh_map, loads)
             pack_s = time.perf_counter() - tp0
-            combine_masks = (jax.device_put(arrays.step_mask),
-                             jax.device_put(arrays.boundary),
-                             jax.device_put(arrays.weight))
+            with tr.span("prep.h2d", t=t):
+                combine_masks = (jax.device_put(arrays.step_mask),
+                                 jax.device_put(arrays.boundary),
+                                 jax.device_put(arrays.weight))
             return _PreparedRound(t=t, clients=clients, workers=workers,
                                   assignment=assignment, arrays=arrays,
                                   device=None, pack_s=pack_s,
@@ -874,6 +939,7 @@ class FederatedEngine:
                                   shares=shares, stall_s=stall_s,
                                   fallback=fallback, sampler_st=sampler_st,
                                   telemetry_st=telemetry_st,
+                                  control_st=control_st,
                                   worker_programs=worker_programs,
                                   combine_masks=combine_masks,
                                   affinity_swaps=n_swaps,
@@ -881,31 +947,35 @@ class FederatedEngine:
                                   slo_p50=slo_p50, slo_p99=slo_p99,
                                   stale_fraction=stale_fraction,
                                   online_pool=online_pool)
-        if self._device_cache is not None:
-            # Cache path: no full-size host batch buffer exists at all —
-            # masks are built host-side as usual, but content travels as a
-            # compact [n_miss, ...] array and the device assembles the
-            # round from it (misses + pool hits) in _execute.
-            S = self._s_align(plan.s_real)
-            cache_plan = self._device_cache.plan(plan, S, t)
-            arrays = build_round_masks(plan, S, buffers=self._pack_buffers)
-            host_batches = gather_content_rows(
-                self.dataset, plan, cache_plan.content_mask,
-                cache_plan.n_miss_rows, batch_size=self.cfg.batch_size,
-                seq_len=self.cfg.seq_len, buffers=self._pack_buffers)
-        else:
-            arrays = build_round_arrays(
-                self.dataset, plan=plan,
-                batch_size=self.cfg.batch_size, seq_len=self.cfg.seq_len,
-                s_align=self._s_align, buffers=self._pack_buffers)
-            host_batches = arrays.batches
+        with tr.span("prep.pack", t=t):
+            if self._device_cache is not None:
+                # Cache path: no full-size host batch buffer exists at all
+                # — masks are built host-side as usual, but content travels
+                # as a compact [n_miss, ...] array and the device assembles
+                # the round from it (misses + pool hits) in _execute.
+                S = self._s_align(plan.s_real)
+                cache_plan = self._device_cache.plan(plan, S, t)
+                arrays = build_round_masks(plan, S,
+                                           buffers=self._pack_buffers)
+                host_batches = gather_content_rows(
+                    self.dataset, plan, cache_plan.content_mask,
+                    cache_plan.n_miss_rows, batch_size=self.cfg.batch_size,
+                    seq_len=self.cfg.seq_len, buffers=self._pack_buffers)
+            else:
+                arrays = build_round_arrays(
+                    self.dataset, plan=plan,
+                    batch_size=self.cfg.batch_size,
+                    seq_len=self.cfg.seq_len,
+                    s_align=self._s_align, buffers=self._pack_buffers)
+                host_batches = arrays.batches
         pack_s = time.perf_counter() - tp0
         # Explicit async H2D: transfers overlap the in-flight round's compute.
         # (Cache path: host_batches is the compact miss transfer only.)
-        device = (jax.device_put(host_batches),
-                  jax.device_put(arrays.step_mask),
-                  jax.device_put(arrays.boundary),
-                  jax.device_put(arrays.weight))
+        with tr.span("prep.h2d", t=t):
+            device = (jax.device_put(host_batches),
+                      jax.device_put(arrays.step_mask),
+                      jax.device_put(arrays.boundary),
+                      jax.device_put(arrays.weight))
         return _PreparedRound(t=t, clients=clients, workers=workers,
                               assignment=assignment, arrays=arrays,
                               device=device, pack_s=pack_s,
@@ -915,6 +985,7 @@ class FederatedEngine:
                               shares=shares, stall_s=stall_s,
                               fallback=fallback, sampler_st=sampler_st,
                               telemetry_st=telemetry_st,
+                              control_st=control_st,
                               padded_steps=(arrays.step_mask.size
                                             - plan.n_steps_total),
                               slo_p50=slo_p50, slo_p99=slo_p99,
@@ -1002,17 +1073,24 @@ class FederatedEngine:
         # On a single shared device all programs serialize anyway and the
         # per-shard deltas approximate the target topology.
         t0 = prep.exec_t0
+        tr = self._tracer
         by_shard: dict[int, list] = {}
-        for i, (_, _, shard, _, _, out) in enumerate(dispatched):
-            by_shard.setdefault(shard, []).append((i, out[2]))
+        for i, (wid, _, shard, _, _, out) in enumerate(dispatched):
+            by_shard.setdefault(shard, []).append((i, wid, out[2]))
         meas = [0.0] * len(dispatched)
 
         def sync_shard(chain):
             last = t0
-            for i, arr in chain:
+            for i, wid, arr in chain:
                 jax.block_until_ready(arr)
                 now = time.perf_counter()
                 meas[i] = max(now - last, 0.0)
+                if tr.enabled:
+                    # Retroactive span from the delta already measured for
+                    # telemetry — each worker renders as its own lane.
+                    tr.add_span("exec.sync", last, now - last,
+                                lane=f"worker{wid}", wid=int(wid),
+                                t=prep.t)
                 last = now
 
         if len(by_shard) > 1:
@@ -1023,6 +1101,11 @@ class FederatedEngine:
         prep.worker_times = [
             (wid, tname, xs, pred, meas[i])
             for i, (wid, tname, _, xs, pred, _) in enumerate(dispatched)]
+        # Combine wall starts here (closed at the loss sync): the remaining
+        # device work after every worker program has completed IS the
+        # cross-shard reduction.  perf_counter reads only — no RNG, and the
+        # measurement runs with tracing on or off.
+        prep.combine_t0 = time.perf_counter()
         # Combine.  Flat mode concatenates every worker's lane partials
         # along W (exact — no arithmetic) and runs the reduction tail as
         # one program: O(K·lanes) partials cross to the combine device.
@@ -1130,29 +1213,45 @@ class FederatedEngine:
         """Dispatch the compiled round step (async); returns metrics."""
         if prep.worker_programs is not None:
             return self._execute_mesh(prep)
-        batches, step_mask, boundary, weight = prep.device
-        if self._device_cache is not None and prep.cache_plan is not None:
-            # batches arrived as compact miss rows: one fused device pass
-            # scatters them into the persistent round base, recycles
-            # inserted clients into the HBM pool, and fills hits from it.
-            batches = self._device_cache.apply(batches, prep.cache_plan)
-        if self.strategy.associative:
-            new_params, metrics = self._round_step(
-                self.params, batches, step_mask, boundary, weight)
-            self.params = new_params
-        else:
-            stacked, ws, metrics = self._gather_step(
-                self.params, batches, step_mask, boundary, weight)
-            self.params = self.strategy.reduce(stacked, ws, self.params)
-        return metrics
+        with self._tracer.span("exec.dispatch", t=prep.t):
+            batches, step_mask, boundary, weight = prep.device
+            if self._device_cache is not None and prep.cache_plan is not None:
+                # batches arrived as compact miss rows: one fused device
+                # pass scatters them into the persistent round base,
+                # recycles inserted clients into the HBM pool, and fills
+                # hits from it.
+                batches = self._device_cache.apply(batches, prep.cache_plan)
+            if self.strategy.associative:
+                new_params, metrics = self._round_step(
+                    self.params, batches, step_mask, boundary, weight)
+                self.params = new_params
+            else:
+                stacked, ws, metrics = self._gather_step(
+                    self.params, batches, step_mask, boundary, weight)
+                self.params = self.strategy.reduce(stacked, ws, self.params)
+            return metrics
 
     def _post_execute(self, prep: _PreparedRound, metrics) -> None:
         """Consumer hook at the device sync point: measure round execution
         wall time and — in measured mode — record/attribute it and mark the
         round *finished* for the refit barrier (this is what wakes a
         stalled producer, so it runs before any queue wait)."""
-        float(metrics.loss)                    # device sync point
-        prep.exec_s = time.perf_counter() - prep.exec_t0
+        with self._tracer.span("exec.wait", t=prep.t):
+            float(metrics.loss)                # device sync point
+        now = time.perf_counter()
+        prep.exec_s = now - prep.exec_t0
+        if prep.combine_t0 > 0.0:
+            # Mesh path: the window from last worker sync to the loss sync
+            # is the cross-shard combine's wall time (dispatch + device
+            # reduction).  Booked retroactively so the combine renders as
+            # one span even though its dispatch is async.
+            prep.combine_s = max(now - prep.combine_t0, 0.0)
+            if self._tracer.enabled:
+                self._tracer.add_span(
+                    "exec.combine", prep.combine_t0, prep.combine_s,
+                    t=prep.t, mode=self.cfg.combine_mode,
+                    compress=self.cfg.combine_compress,
+                    bytes=int(prep.combine_bytes))
         if self.control is not None:
             self.control.round_executed(prep.t, prep.exec_s, prep.shares,
                                         prep.n_steps_real,
@@ -1196,10 +1295,46 @@ class FederatedEngine:
             slo_p50=prep.slo_p50, slo_p99=prep.slo_p99,
             stale_fraction=prep.stale_fraction,
             online_pool=prep.online_pool)
+        # Round critique (repro.obs): idle_fraction comes from the
+        # deterministic placement simulation, so it is bit-identical across
+        # depths and tracer on/off; critical_path is timing-derived (like
+        # exec_time) and excluded from bitwise comparisons.
+        crit = critique_round(
+            round_idx=t, pack_s=prep.pack_s, overlap_s=prep.overlap_s,
+            exec_s=prep.exec_s, combine_s=prep.combine_s,
+            barrier_stall_s=prep.stall_s, makespan=prep.makespan,
+            idle_time=prep.idle_time, n_workers=len(prep.workers),
+            worker_meas=([(w[0], w[4]) for w in prep.worker_times]
+                         if prep.worker_times else None))
+        result.idle_fraction = crit.idle_fraction
+        result.critical_path = crit.critical_path
         self.history.append(result)
         self.round_idx = t + 1
         self._sampler_ckpt_state = prep.sampler_st
         self._telemetry_ckpt_state = prep.telemetry_st
+        self._control_ckpt_state = prep.control_st
+        tr = self._tracer
+        if tr.enabled:
+            tr.counter("cache_hit_rate", hit_rate)
+            tr.counter("online_pool", prep.online_pool)
+            tr.counter("combine_bytes", float(prep.combine_bytes))
+        if self._metrics is not None:
+            m = self._metrics
+            m.inc("rounds")
+            m.inc("clients", len(prep.clients))
+            m.gauge("loss", loss)
+            m.gauge("idle_fraction", crit.idle_fraction)
+            m.gauge("overlap_fraction", result.overlap_fraction)
+            m.inc("critical_path." + crit.critical_path)
+            m.observe("round_wall_s", result.wall_time)
+            m.observe("pack_s", prep.pack_s)
+            m.observe("exec_s", prep.exec_s)
+        if self.obs is not None and self.obs.flight is not None:
+            self.obs.flight.on_round(t, {
+                "loss": loss, "n_clients": len(prep.clients),
+                "makespan": prep.makespan, "pack_s": prep.pack_s,
+                "exec_s": prep.exec_s, "stall_s": prep.stall_s,
+                "critique": crit.as_dict()})
 
         if self.ckpt is not None and (t + 1) % self.cfg.rounds_per_checkpoint == 0:
             self.save_checkpoint()
@@ -1216,7 +1351,7 @@ class FederatedEngine:
             prep.exec_t0 = time.perf_counter()
             metrics = self._execute(prep)
             self._post_execute(prep, metrics)
-        except BaseException:
+        except BaseException as e:
             # A prep that died between cache.plan and cache.apply left LRU
             # entries whose pool rows were never written — a retry would
             # serve them as bogus hits.
@@ -1224,6 +1359,7 @@ class FederatedEngine:
                 self._device_cache.invalidate()
             if self.control is not None:
                 self.control.abort()
+            self._flight_dump(f"run_round abort: {e!r}")
             raise
         return self._finish(prep, metrics, t0)
 
@@ -1251,7 +1387,7 @@ class FederatedEngine:
         after a pipeline error.)"""
         try:
             return self._run_pipelined_inner(n_rounds, log_every=log_every)
-        except BaseException:
+        except BaseException as e:
             # Any failure can leave preps that planned cache insertions
             # whose pool rows were never written (plan runs producer-side,
             # apply consumer-side) — a retry would serve them as bogus
@@ -1262,7 +1398,16 @@ class FederatedEngine:
                 # Wake a producer stalled at the refit barrier — the round
                 # it waits for will never finish now.
                 self.control.abort()
+            self._flight_dump(f"pipeline abort: {e!r}")
             raise
+
+    def _flight_dump(self, reason: str) -> None:
+        """Flight-recorder dump on an engine abort (never raises — the
+        recorder guards itself; this must not mask the primary error)."""
+        if self.obs is not None and self.obs.flight is not None:
+            path = self.obs.flight.dump(reason)
+            if path is not None:
+                print(f"flight recorder: dumped {path} ({reason})")
 
     def _run_pipelined_inner(self, n_rounds: int, *,
                              log_every: int = 0) -> list[RoundResult]:
@@ -1401,15 +1546,46 @@ class FederatedEngine:
             extra["telemetry"] = {
                 t: [list(r) for r in list(m._xs) if r[0] < self.round_idx]
                 for t, m in list(self.placement.models.items())}
-        aux = None
+        # The aux sidecar nests one subtree per owner since layout "v2"
+        # ({"compress": ..., "control": ...}); pre-v2 sidecars held the
+        # compress tree at the top level and restore_latest still reads
+        # them (the extra["aux_layout"] marker picks the decoder).
+        aux_tree = {}
         if self._compress is not None:
             # Error-feedback residuals: consumer-owned, committed for rounds
             # <= round_idx - 1 by checkpoint time, so the aux sidecar matches
             # round_idx exactly.  Without them a resumed compressed run would
             # re-lose every update's quantization error once.
             extra["combine_compress"] = self._compress.state_meta()
-            aux = self._compress.state_aux()
-        self.ckpt.save(self.round_idx, self.params, extra=extra, aux=aux)
+            comp_aux = self._compress.state_aux()
+            if comp_aux is not None:
+                aux_tree["compress"] = comp_aux
+        if self._control_ckpt_state is not None:
+            # Control-loop state (drift EWMAs, slot trajectory, pending
+            # measured rows), snapshotted at prepare time like the sampler
+            # RNG so it matches round_idx exactly at any pipeline depth.
+            # JSON-encoded to one uint8 leaf: the sidecar stays a flat
+            # array container and the state schema can evolve freely.
+            payload = np.frombuffer(
+                json.dumps(self._control_ckpt_state).encode("utf-8"),
+                dtype=np.uint8).copy()
+            extra["control"] = {"nbytes": int(payload.size)}
+            aux_tree["control"] = payload
+        if aux_tree:
+            extra["aux_layout"] = "v2"
+        self.ckpt.save(self.round_idx, self.params, extra=extra,
+                       aux=aux_tree or None)
+
+    def _restore_aux_entry(self, rnd: int, extra: dict, key: str, like):
+        """Load one owner's subtree from the checkpoint aux sidecar.  v2
+        sidecars nest per owner; pre-v2 ones hold the compress tree at the
+        top level (and had no other owners)."""
+        if extra.get("aux_layout") == "v2":
+            out = self.ckpt.restore_aux({key: like}, round_idx=rnd)
+            return None if out is None else out[key]
+        if key != "compress":
+            return None
+        return self.ckpt.restore_aux(like, round_idx=rnd)
 
     def restore_latest(self) -> bool:
         if self.ckpt is None or self.ckpt.latest_round() is None:
@@ -1422,9 +1598,36 @@ class FederatedEngine:
             # past the restore point must not survive as hits.
             self._device_cache.invalidate()
         if self.control is not None:
-            # Pending (unflushed) measured rows belong to rounds that will
-            # re-run and re-record after the restore.
-            self.control.reset(rnd)
+            # Resume the control loop where round ``rnd``'s prep left it
+            # (drift EWMAs mid-hysteresis, slot trajectory, pending
+            # measured rows) when the checkpoint carries the snapshot;
+            # otherwise fall back to the old re-warm (reset drops pending
+            # rows for rounds that will re-run and re-record).
+            restored_ctl = False
+            ctl_meta = extra.get("control")
+            if ctl_meta:
+                try:
+                    arr = self._restore_aux_entry(
+                        rnd, extra, "control",
+                        np.zeros(int(ctl_meta["nbytes"]), dtype=np.uint8))
+                    if arr is not None:
+                        state = json.loads(
+                            np.asarray(arr, dtype=np.uint8).tobytes())
+                        self.control.load_state(state, rnd)
+                        # Keep the snapshot: a save before the next round
+                        # finishes must not drop the restored loop state.
+                        self._control_ckpt_state = state
+                        restored_ctl = True
+                    else:
+                        print("warning: checkpoint lists controller state "
+                              "but the .aux.npz sidecar is missing; "
+                              "resuming with a re-warmed control loop")
+                except (KeyError, ValueError, TypeError) as e:
+                    print("warning: checkpoint controller state unusable "
+                          f"({e!r}); resuming with a re-warmed control "
+                          "loop")
+            if not restored_ctl:
+                self.control.reset(rnd)
         if "sampler" in extra and extra["sampler"]:
             try:
                 self.sampler = restore_sampler(extra["sampler"])
@@ -1460,9 +1663,9 @@ class FederatedEngine:
                           "will NOT match the uninterrupted one")
                 else:
                     try:
-                        aux = self.ckpt.restore_aux(
-                            self._compress.aux_like(meta["shards"]),
-                            round_idx=rnd)
+                        aux = self._restore_aux_entry(
+                            rnd, extra, "compress",
+                            self._compress.aux_like(meta["shards"]))
                         if aux is not None:
                             self._compress.load_state(aux)
                         else:

@@ -58,6 +58,7 @@ snapshot ``CachePlan.pool_rows``, never the producer-owned live value).
 
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -279,6 +280,11 @@ class DeviceBatchCache:
         self._row_bytes = 0
         self.rebalances = 0  # orphan-shard budget moves (see rebalance())
         self.rows_moved = 0  # logical capacity rows moved across shards
+        # Optional observability hook (repro.obs): when the engine attaches
+        # a tracer, each producer-side plan() books a span on the pack lane
+        # with its hit/miss outcome.  Clock reads + ring appends only — the
+        # LRU decisions themselves are identical with tracing on or off.
+        self.tracer = None
         self._asm_cache = StepCompileCache(
             lambda: _assemble_round,
             capacity=compile_cache_size,
@@ -298,6 +304,7 @@ class DeviceBatchCache:
         sub-plan against its shard); ``worker_slot`` isolates the worker's
         persistent round base from other workers of the same shard.
         """
+        _t0 = time.perf_counter() if self.tracer is not None else 0.0
         sh = self._shards[shard]
         sh.max_slot = max(sh.max_slot, int(worker_slot))
         C = rplan.n_clients
@@ -351,6 +358,16 @@ class DeviceBatchCache:
         n_miss = int(rplan.n_steps_total - n_hit_steps)
         n_miss_rows = _pow2(max(n_miss, 1))
         miss_dst = flat_steps[miss_sel]
+        if self.tracer is not None:
+            self.tracer.add_span(
+                "cache.plan",
+                _t0,
+                time.perf_counter() - _t0,
+                round=int(round_idx),
+                shard=int(shard),
+                hit_steps=n_hit_steps,
+                miss_steps=n_miss,
+            )
         return CachePlan(
             round_idx=round_idx,
             W=rplan.W,

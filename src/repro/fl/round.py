@@ -496,6 +496,12 @@ class StepCompileCache:
         self.compiles = 0
         self.evictions = 0
         self.hits = 0
+        # Optional observability hook (repro.obs): when the engine attaches
+        # a tracer, every fresh lowering books an instant labelled with the
+        # cache's role — compiles become visible events on the trace
+        # timeline, not just a counter.
+        self.tracer = None
+        self.trace_label = "step"
 
     def _jit(self):
         if self.donate_argnums is not None:
@@ -514,6 +520,9 @@ class StepCompileCache:
         fresh = fn is None
         if fresh:
             self.compiles += 1
+            if self.tracer is not None:
+                self.tracer.instant("compile", cache=self.trace_label,
+                                    key=str(key))
             fn = self._jit()
             self._entries[key] = fn
             while len(self._entries) > self.capacity:

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
+from collections import Counter
 from dataclasses import replace
 
 import jax
@@ -34,6 +36,7 @@ from repro.distributed import FailureEvent, WorkerPool
 from repro.fl.strategy import FedAvg, FedMedian
 from repro.models import init_params, make_loss_fn
 from repro.models.papertasks import TASK_MODELS, make_task_model
+from repro.obs import make_observability, write_trace
 from repro.optim import adam, sgd
 
 __all__ = ["build_engine", "main", "flags_markdown", "PRESETS"]
@@ -142,7 +145,8 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  mesh_workers: int = 0, cache_affinity: bool = False,
                  bucket_mode: str = "round", combine_mode: str = "flat",
                  combine_compress: str = "none", topk_frac: float = 0.05,
-                 grad_clip: float | None = None) -> FederatedEngine:
+                 grad_clip: float | None = None,
+                 obs=None) -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
     key = jax.random.key(seed)
     # The open-world sampler streams from a hash-derived registry: the BASE
@@ -241,6 +245,7 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                             combine_topk_frac=topk_frac,
                             **batch_kw),
         checkpoint_store=CheckpointStore(ckpt_dir) if ckpt_dir else None,
+        obs=obs,
     )
     return engine
 
@@ -352,6 +357,21 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--topk-frac", type=float, default=0.05,
                     help="fraction of coordinates topk compression keeps "
                          "per leaf (static: payload shapes depend on it)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace.json of the run's "
+                         "span timeline (producer pack, per-worker sync, "
+                         "combine, controller decisions, counter tracks); "
+                         "load it at ui.perfetto.dev — see "
+                         "docs/OBSERVABILITY.md.  Tracing never perturbs "
+                         "results (bit-identity is test-enforced)")
+    ap.add_argument("--trace-rounds", type=int, default=64,
+                    help="rounds of spans each tracer lane retains (ring "
+                         "buffer; older spans are dropped, counted, never "
+                         "blocked on)")
+    ap.add_argument("--flight-rounds", type=int, default=0,
+                    help="keep the last N round summaries in memory and "
+                         "dump flight.json (spans + metrics + rounds) on "
+                         "engine abort, prep failure, or SIGTERM (0 = off)")
     ap.add_argument("--seed", type=int, default=1337)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -394,6 +414,11 @@ def main() -> int:
         print(flags_markdown())
         return 0
 
+    obs = None
+    if args.trace_out or args.flight_rounds > 0:
+        obs = make_observability(trace_rounds=args.trace_rounds,
+                                 flight_rounds=args.flight_rounds)
+
     engine = build_engine(
         task=args.task, arch=args.arch, preset=args.preset,
         placement=args.placement, cohort=args.cohort,
@@ -418,7 +443,14 @@ def main() -> int:
         bucket_mode=args.bucket_mode,
         combine_mode=args.combine_mode,
         combine_compress=args.combine_compress,
-        topk_frac=args.topk_frac)
+        topk_frac=args.topk_frac,
+        obs=obs)
+
+    if obs is not None and obs.flight is not None:
+        def _on_sigterm(signum, frame):  # last-gasp state dump
+            obs.flight.dump("SIGTERM")
+            raise SystemExit(128 + signum)
+        signal.signal(signal.SIGTERM, _on_sigterm)
 
     if args.fail_worker:
         wid, rnd = (int(x) for x in args.fail_worker.split(":"))
@@ -446,7 +478,13 @@ def main() -> int:
             [r.slo_p50 for r in results])) if results else None,
         "slo_p99_s": float(np.mean(
             [r.slo_p99 for r in results])) if results else None,
+        "mean_idle_fraction": float(np.mean(
+            [r.idle_fraction for r in results])) if results else None,
+        "critical_path": dict(Counter(
+            r.critical_path for r in results if r.critical_path)),
     }
+    if obs is not None:
+        summary["tracer"] = obs.tracer.stats()
     if args.sampler == "online":
         summary["population"] = {
             "registered": int(engine.sampler.population),
@@ -484,6 +522,10 @@ def main() -> int:
             r.barrier_stall_s for r in results))
         summary["fallback_rounds"] = int(sum(
             r.drift_fallback for r in results))
+    if args.trace_out:
+        recs = obs.tracer.snapshot()
+        write_trace(args.trace_out, recs)
+        print(f"trace: wrote {len(recs)} records to {args.trace_out}")
     print(json.dumps(summary, indent=1))
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:

@@ -518,6 +518,120 @@ def test_checkpoint_restores_sampler_kind_exponent_and_stream(tmp_path):
     assert res[0].n_clients == whole[4].n_clients
 
 
+# -- controller state persistence (ROADMAP carry-over (b)) --------------------
+
+def test_checkpoint_persists_controller_state(tmp_path):
+    """The ``.aux.npz`` sidecar carries the controller snapshot: a restore
+    must hand back the drift EWMAs, the slot trajectory, and the fallback
+    counters instead of resetting the control loop to cold."""
+    from repro.checkpoint import CheckpointStore
+
+    def engine():
+        return _engine(1, drift_threshold=0.01, adapt_interval=2,
+                       rounds_per_checkpoint=2)
+
+    a = engine()
+    a.ckpt = CheckpointStore(str(tmp_path))
+    a.run(6)                               # drift trips + climber steers
+    saved = a._control_ckpt_state
+    assert saved is not None
+    assert saved["drift"]["states"]["a40"][1] > 0     # EWMA fed
+    b = engine()
+    b.ckpt = CheckpointStore(str(tmp_path))
+    assert b.restore_latest()
+    assert b.round_idx == 6
+    # the restored controller reproduces the persisted snapshot exactly
+    assert b.control.state_dict() == saved
+    st = b.control.drift.states["a40"]
+    assert st.n > 0 and st.ewma > 0.0      # not a cold reset
+    assert b.control.autoconc.trajectory == a.control.autoconc.trajectory[
+        : len(b.control.autoconc.trajectory)]
+    b.run(1)                               # and the loop keeps running
+
+
+def test_checkpoint_without_controller_snapshot_falls_back_to_reset(
+        tmp_path):
+    """Pre-v2 checkpoints (no controller sidecar entry) must still load
+    into a controller-enabled engine — the restore falls back to the
+    documented reset instead of raising."""
+    from repro.checkpoint import CheckpointStore
+
+    a = _engine(1, rounds_per_checkpoint=2)   # controller off: no snapshot
+    a.ckpt = CheckpointStore(str(tmp_path))
+    a.run(4)
+    b = _engine(1, drift_threshold=0.01, rounds_per_checkpoint=2)
+    b.ckpt = CheckpointStore(str(tmp_path))
+    assert b.restore_latest()
+    assert b.round_idx == 4
+    assert not b.control.drift.drifted     # cold reset, not garbage
+    b.run(1)
+
+
+def test_drift_detector_resumes_mid_hysteresis():
+    """Serialize the detector WHILE an episode is open (drifted, holding
+    through hysteresis): the restored detector must finish the episode
+    exactly like one that never left memory."""
+    def feed_recovery(d):
+        d.update(3, "a40", [0.3] * 4)      # below threshold, above recover
+        held = d.drifted
+        d.update(4, "a40", [0.05] * 12)
+        return held, d.drifted, [e[2] for e in d.events]
+
+    live = DriftDetector(threshold=0.5, window=4, recover_fraction=0.5,
+                         min_points=4)
+    live.update(1, "a40", [0.1] * 4)
+    live.update(2, "a40", [2.0] * 6)
+    assert live.drifted
+    resumed = DriftDetector(threshold=0.5, window=4, recover_fraction=0.5,
+                            min_points=4)
+    resumed.load_state(live.state_dict())
+    assert resumed.drifted and resumed.states["a40"].since_round == 2
+    assert feed_recovery(resumed) == feed_recovery(live)
+    assert [e[2] for e in resumed.events] == ["drift", "recover"]
+
+
+def test_measured_pending_rows_roundtrip_drops_future_rounds():
+    """Consumer-side rows recorded after the snapshot round are dropped on
+    restore (they belong to rounds the resume will re-run); everything
+    earlier survives, and the barrier resumes as if rounds 0..r-1
+    finished sequentially."""
+    mt = MeasuredTelemetry(policy="reuse")
+    mt.begin_run(0)
+    mt.record(3, 1.0, [("a40", 4.0, 1.0)], n_steps=4)
+    mt.record(5, 2.0, [("a40", 8.0, 1.0)], n_steps=8)
+    state = mt.state_dict()
+    fresh = MeasuredTelemetry(policy="reuse")
+    fresh.load_state(state, 5)             # resuming at round 5
+    assert fresh.last_finished == 4
+    assert {m[0] for m in fresh._pending_meta} == {3}
+    assert all(r[0] == 3 for r in fresh._pending_rows)
+    assert fresh.audit == []               # replay is not a violation
+    fr = fresh.flush(6)
+    assert fr.rows and all(r[0] == 3 for r in fr.rows)
+
+
+def test_autoconc_state_roundtrip_preserves_climb():
+    """The hill climber's direction, window, and best-so-far survive the
+    roundtrip — a resumed climber continues the probe it was on."""
+    ac = AdaptiveConcurrency(interval=1, min_slots=1, max_slots=16)
+    ac.seed("a40", 2)
+    for _ in range(5):
+        ac.observe_round(100.0 - (ac.states["a40"].slots - 6) ** 2)
+        ac.maybe_update(0)
+    fresh = AdaptiveConcurrency(interval=1, min_slots=1, max_slots=16)
+    fresh.load_state(ac.state_dict())
+    assert fresh.states["a40"].slots == ac.states["a40"].slots
+    assert fresh.states["a40"].direction == ac.states["a40"].direction
+    assert fresh.states["a40"].best_slots == ac.states["a40"].best_slots
+    assert fresh._window == ac._window and fresh._turn == ac._turn
+    assert fresh.trajectory == ac.trajectory
+    # both continue identically on the same feedback
+    for c in (ac, fresh):
+        c.observe_round(95.0)
+        c.maybe_update(1)
+    assert fresh.states["a40"].slots == ac.states["a40"].slots
+
+
 # -- config validation --------------------------------------------------------
 
 def test_engine_config_rejects_bad_control_knobs():

@@ -50,6 +50,40 @@ def test_population_doc_covers_the_subsystem():
     assert "POPULATION.md" in (REPO / "ROADMAP.md").read_text()
 
 
+def test_observability_doc_covers_the_plane():
+    """docs/OBSERVABILITY.md must keep naming the tracer mechanics, the
+    span taxonomy, the idle-gap formula, the Perfetto workflow, the
+    flight-recorder triggers, and the overhead/trend gates — and stay
+    reachable from README and ARCHITECTURE."""
+    assert check_docs.check_doc_coverage() == []
+    assert "docs/OBSERVABILITY.md" in check_docs.DOC_NEEDLES
+    for needle in ("Tracer", "FlightRecorder", "make_observability",
+                   "bit-identical", "critique_round", "ui.perfetto.dev",
+                   "tracer_overhead_fraction", "SIGTERM",
+                   "idle_time / (makespan * n_workers)"):
+        assert needle in check_docs.OBSERVABILITY_NEEDLES, needle
+    assert "OBSERVABILITY.md" in (REPO / "README.md").read_text()
+    assert "OBSERVABILITY.md" in \
+        (REPO / "docs" / "ARCHITECTURE.md").read_text()
+
+
+def test_observability_doc_names_every_traced_span():
+    """Every span name the engine emits must be documented — adding an
+    instrumentation site without documenting it fails here."""
+    import re
+
+    src = ""
+    for rel in ("src/repro/core/engine.py", "src/repro/fl/round.py",
+                "src/repro/data/device_cache.py"):
+        src += (REPO / rel).read_text()
+    names = set(re.findall(r'\.span\(\s*"([^"]+)"', src))
+    names |= set(re.findall(r'add_span\(\s*\n?\s*"([^"]+)"', src))
+    assert names, "span-name scrape found nothing — pattern drifted?"
+    doc = (REPO / "docs" / "OBSERVABILITY.md").read_text()
+    for name in names:
+        assert name in doc, f"span {name!r} not in OBSERVABILITY.md"
+
+
 def test_population_doc_catalogs_every_scenario_storm():
     """The storm catalog documents EVERY storm control/scenarios.py can
     run — adding a scenario without documenting it fails here."""

@@ -13,8 +13,11 @@ def _record():
         "pack": {"speedup_x": 9.5, "vectorized_pack_s_per_round": 0.7},
         "engine": {
             "depth0": {"overlap_fraction": 0.0, "recompiles": 1},
-            "depth1": {"overlap_fraction": 0.87, "recompiles": 1},
+            "depth1": {"overlap_fraction": 0.87, "recompiles": 1,
+                       "idle_fraction": 0.12, "wall_s_per_round": 0.03},
             "depth2": {"overlap_fraction": 0.87, "recompiles": 1},
+            "depth1_traced": {"spans": 90, "dropped_spans": 0},
+            "tracer_overhead_fraction": 0.004,
         },
         "device_cache": {"on": {"hit_rate": 0.6}},
         "mesh": {
@@ -78,6 +81,12 @@ def test_each_regression_class_is_caught():
          lambda r: r["engine"]["depth2"].__setitem__("overlap_fraction", 0.5)),
         ("recompile growth",
          lambda r: r["engine"]["depth1"].__setitem__("recompiles", 4)),
+        ("idle accounting changed",
+         lambda r: r["engine"]["depth1"].__setitem__("idle_fraction", 0.5)),
+        ("tracer overhead budget blown",
+         lambda r: r["engine"].__setitem__("tracer_overhead_fraction", 0.9)),
+        ("traced round recorded nothing",
+         lambda r: r["engine"]["depth1_traced"].__setitem__("spans", 0)),
         ("cache never hits",
          lambda r: r["device_cache"]["on"].__setitem__("hit_rate", 0.0)),
         ("mesh shard counts diverged",
@@ -131,6 +140,15 @@ def test_each_regression_class_is_caught():
         fresh = copy.deepcopy(_record())
         mutate(fresh)
         assert compare(_record(), fresh), f"gate missed: {name}"
+
+
+def test_tracer_overhead_absolute_floor_absorbs_fast_round_noise():
+    """On a fast round the 2% relative budget is sub-millisecond — pure
+    scheduler jitter.  The absolute floor keeps the gate honest without
+    flapping: 20% of a 30ms round (6ms) passes, 90% (27ms) fails."""
+    fresh = _record()
+    fresh["engine"]["tracer_overhead_fraction"] = 0.2
+    assert compare(_record(), fresh) == []
 
 
 def test_missing_sections_fail_not_crash():
@@ -315,6 +333,56 @@ def test_trend_kinds_are_gated_independently():
     failures, _ = compare_trend(entries)
     assert [f for f in failures if f.startswith("control:")]
     assert not [f for f in failures if f.startswith("pipeline:")]
+
+
+def test_trend_summary_roundtrip_and_fallback():
+    """A committed summary keeps gating when the live history is short
+    (cold CI cache): sustained breaches against the summary medians fail,
+    a single breach warns, and no summary means the old trivial pass."""
+    from benchmarks.trend import compare_trend, summarize_trend
+    summary = summarize_trend(_trend([_record() for _ in range(5)]))
+    meds = summary["kinds"]["pipeline"]
+    assert meds["engine.depth1.idle_fraction"]["median"] == 0.12
+    bad = copy.deepcopy(_record())
+    bad["engine"]["depth1"]["recompiles"] = 40
+    # two-record live history, both breaching: sustained vs the summary
+    failures, _ = compare_trend(_trend([bad, copy.deepcopy(bad)]),
+                                summary=summary)
+    assert [f for f in failures if "recompiles" in f]
+    # one breaching record: warning only
+    failures, warnings = compare_trend(_trend([bad]), summary=summary)
+    assert failures == [] and [w for w in warnings if "recompiles" in w]
+    # healthy short history passes against the summary
+    failures, warnings = compare_trend(_trend([_record()]), summary=summary)
+    assert failures == [] and warnings == []
+    # and without a summary the short history passes trivially (unchanged)
+    failures, warnings = compare_trend(_trend([bad, copy.deepcopy(bad)]))
+    assert failures == [] and warnings == []
+
+
+def test_trend_summary_io_and_cli(tmp_path):
+    from benchmarks.trend import load_summary, summarize_trend, write_summary
+    path = str(tmp_path / "summary.json")
+    write_summary(path, summarize_trend(_trend([_record()] * 4)))
+    loaded = load_summary(path)
+    assert loaded is not None and loaded["window"] == 7
+    assert load_summary(str(tmp_path / "absent.json")) is None
+    (tmp_path / "garbled.json").write_text("{not json")
+    assert load_summary(str(tmp_path / "garbled.json")) is None
+    # --summary gates a short live trend; --summary-out rewrites the file
+    trend = tmp_path / "trend.jsonl"
+    fresh = tmp_path / "fresh.json"
+    bad = copy.deepcopy(_record())
+    bad["engine"]["depth1"]["recompiles"] = 40
+    fresh.write_text(json.dumps(bad))
+    for stamp in ("d1", "d2"):
+        assert main(["--append", str(trend), str(fresh),
+                     "--stamp", stamp]) == 0
+    assert main(["--trend", str(trend)]) == 0       # no summary: trivial
+    out = str(tmp_path / "regen.json")
+    assert main(["--trend", str(trend), "--summary", path,
+                 "--summary-out", out]) == 1        # sustained vs summary
+    assert load_summary(out) is not None            # regenerated anyway
 
 
 def test_trend_cli_roundtrip(tmp_path):

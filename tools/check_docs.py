@@ -50,6 +50,24 @@ ARCHITECTURE_NEEDLES = (
     # the open-world population layer (streaming registry + SLO metrics)
     "Open-world population", "OnlinePoolSampler", "ArrivalIndex",
     "stale_fraction", "never materializes",
+    # the observability plane (tracer bit-identity, idle-gap accounting,
+    # flight dumps) and controller checkpoint persistence
+    "Tracer", "idle_fraction", "flight recorder", "state_dict",
+)
+
+# What docs/OBSERVABILITY.md must keep covering: the tracer's ring
+# mechanics and the no-perturbation invariant, the span taxonomy, the
+# idle-gap formula, the Perfetto workflow, the flight-recorder dump
+# triggers, and the overhead/trend gates.
+OBSERVABILITY_NEEDLES = (
+    "Tracer", "MetricsRegistry", "FlightRecorder", "make_observability",
+    "NULL_TRACER", "bit-identical", "overwrite-oldest",
+    "prep.pack", "prep.barrier", "exec.wait", "exec.sync", "pollen-pack",
+    "critique_round", "idle_time / (makespan * n_workers)",
+    "critical_path", "write_trace", "ui.perfetto.dev", "--trace-out",
+    "--flight-rounds", "SIGTERM", "never to raise",
+    "tracer_overhead_fraction", "trend_summary.json",
+    "state_dict", ".aux.npz",
 )
 
 # What docs/POPULATION.md must keep covering: the registry's hash streams,
@@ -68,6 +86,7 @@ POPULATION_NEEDLES = (
 DOC_NEEDLES = {
     "docs/ARCHITECTURE.md": ARCHITECTURE_NEEDLES,
     "docs/POPULATION.md": POPULATION_NEEDLES,
+    "docs/OBSERVABILITY.md": OBSERVABILITY_NEEDLES,
 }
 
 
