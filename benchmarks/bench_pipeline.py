@@ -115,7 +115,7 @@ def _pack_comparison(*, cohort: int, workers: int, rounds: int) -> dict:
 
 def _build_engine(*, depth: int, sampler=None, device_cache: int = 0,
                   mesh: int = 0, bucket: str = "round", combine: str = "flat",
-                  compress: str = "none", frac: float = 0.05,
+                  compress: str = "none", frac: float = 0.05, hosts: int = 0,
                   pool=None, steps_cap: int = 8, dataset=None, obs=None):
     import jax
 
@@ -142,31 +142,44 @@ def _build_engine(*, depth: int, sampler=None, device_cache: int = 0,
                             device_cache_batches=device_cache,
                             mesh_workers=mesh, bucket_mode=bucket,
                             combine_mode=combine, combine_compress=compress,
-                            combine_topk_frac=frac),
+                            combine_topk_frac=frac, hosts=hosts),
         obs=obs)
 
 
-def _engine_comparison(*, rounds: int) -> dict:
+def _engine_comparison(*, rounds: int, repeats: int = 3) -> dict:
     out = {}
     losses = {}
     for depth in (0, 1, 2):
         eng = _build_engine(depth=depth)
         eng.run(2)                          # warm compile outside the timing
-        t0 = time.perf_counter()
-        res = eng.run(rounds)
-        wall = time.perf_counter() - t0
-        losses[depth] = [r.loss for r in res]
+        # Best-of-N measurement: overlap_fraction is a scheduling-quality
+        # signal, but any single attempt is hostage to runner load (a
+        # stolen core stalls the producer thread and the fraction craters
+        # with no structural cause).  The max over attempts estimates what
+        # the schedule CAN hide on this machine — stable enough to gate at
+        # a tight slack, where the single-shot mean needed 0.15.
+        walls, overlaps, all_res = [], [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = eng.run(rounds)
+            walls.append((time.perf_counter() - t0) / rounds)
+            overlaps.append(float(np.mean(
+                [r.overlap_fraction for r in res])))
+            all_res.extend(res)
+        losses[depth] = [r.loss for r in all_res]
         out[f"depth{depth}"] = {
             "rounds": rounds,
-            "wall_s_per_round": wall / rounds,
-            "pack_s_per_round": float(np.mean([r.pack_time for r in res])),
-            "overlap_fraction": float(np.mean(
-                [r.overlap_fraction for r in res])),
+            "repeats": repeats,
+            "wall_s_per_round": float(min(walls)),
+            "pack_s_per_round": float(np.mean(
+                [r.pack_time for r in all_res])),
+            "overlap_fraction": float(max(overlaps)),
+            "overlap_fraction_attempts": overlaps,
             "idle_fraction": float(np.mean(
-                [r.idle_fraction for r in res])),
+                [r.idle_fraction for r in all_res])),
             "recompiles": eng.compile_stats["compiles"],
             "cache_hits": eng.compile_stats["hits"],
-            "final_loss": float(res[-1].loss),
+            "final_loss": float(all_res[-1].loss),
         }
     # depth is a pure scheduling change: training must be bit-identical
     assert losses[0] == losses[1] == losses[2], "depths disagree on losses"
@@ -185,7 +198,8 @@ def _engine_comparison(*, rounds: int) -> dict:
     t0 = time.perf_counter()
     res = eng.run(rounds)
     traced_wall = (time.perf_counter() - t0) / rounds
-    assert [r.loss for r in res] == losses[1], "tracer perturbed training"
+    assert ([r.loss for r in res]
+            == losses[1][:rounds]), "tracer perturbed training"
     stats = obs.tracer.stats()
     base = out["depth1"]["wall_s_per_round"]
     out["depth1_traced"] = {
@@ -447,6 +461,50 @@ def _population_comparison(*, rounds: int) -> dict:
     return out
 
 
+def _multihost_comparison(*, rounds: int) -> dict:
+    """The host level above the shard→root combine (EngineConfig.hosts):
+    one merged partial per host crosses to the root, so the accounted
+    combine_bytes scale O(H) instead of O(K) — at bit-identical losses
+    across H (hosts=1 is the reference pairwise tree) and no pack-time
+    regression (the producer pipeline is untouched by the combine shape).
+
+    hosts=0 is the legacy scan-fold tree combine: a different (pre-hosts)
+    arithmetic family, benched here as the O(K)-bytes / pack-time anchor.
+    """
+    out = {}
+    losses = {}
+    for hosts in (0, 1, 2, 4):
+        eng = _build_engine(depth=1, mesh=4, combine="tree", hosts=hosts)
+        eng.run(2)                          # warm compile outside the timing
+        t0 = time.perf_counter()
+        res = eng.run(rounds)
+        wall = time.perf_counter() - t0
+        losses[hosts] = [r.loss for r in res]
+        out[f"hosts{hosts}"] = {
+            "rounds": rounds,
+            "wall_s_per_round": wall / rounds,
+            "pack_s_per_round": float(np.mean([r.pack_time for r in res])),
+            "combine_bytes": int(res[-1].combine_bytes),
+            "final_loss": float(res[-1].loss),
+        }
+    out["losses_identical"] = (losses[1] == losses[2] == losses[4])
+    h1 = out["hosts1"]["combine_bytes"]
+    out["root_bytes_ratio_h2_h1"] = out["hosts2"]["combine_bytes"] / h1
+    out["root_bytes_ratio_h4_h1"] = out["hosts4"]["combine_bytes"] / h1
+    out["root_bytes_ratio_legacy_h1"] = out["hosts0"]["combine_bytes"] / h1
+    out["pack_ratio_vs_legacy"] = (out["hosts2"]["pack_s_per_round"] /
+                                   out["hosts0"]["pack_s_per_round"])
+    # acceptance: O(H) at the root (exact byte accounting, machine-
+    # independent), bit-identity in H, and the producer untouched (banded:
+    # pack time is wall-clock)
+    assert out["losses_identical"], losses
+    assert out["root_bytes_ratio_h2_h1"] == 2.0, out
+    assert out["root_bytes_ratio_h4_h1"] == 4.0, out
+    assert out["root_bytes_ratio_legacy_h1"] == 4.0, out   # K=4 shards
+    assert out["pack_ratio_vs_legacy"] <= 1.5, out
+    return out
+
+
 def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
         engine_rounds: int = 8) -> list[str]:
     pack = _pack_comparison(cohort=cohort, workers=workers,
@@ -456,10 +514,11 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
     mesh = _mesh_comparison(rounds=engine_rounds)
     hierarchy = _hierarchy_comparison(rounds=engine_rounds)
     population = _population_comparison(rounds=engine_rounds)
+    multihost = _multihost_comparison(rounds=engine_rounds)
 
     record = {"benchmark": "pipeline", "pack": pack, "engine": engine,
               "device_cache": cache, "mesh": mesh, "hierarchy": hierarchy,
-              "population": population}
+              "population": population, "multihost": multihost}
     out_path = os.environ.get(
         "POLLEN_BENCH_OUT",
         os.path.join(os.path.dirname(__file__), "..", "BENCH_pipeline.json"))
@@ -519,14 +578,19 @@ def run(*, cohort: int = 1000, workers: int = 16, pack_rounds: int = 3,
                 f"{population['slo_p99']:.2f}")
     rows.append(f"bench_pipeline,population_online_pool,"
                 f"{population['online_pool']:.0f}")
+    for tag in ("hosts0", "hosts1", "hosts2", "hosts4"):
+        rows.append(f"bench_pipeline,multihost_{tag}_combine_bytes,"
+                    f"{multihost[tag]['combine_bytes']}")
+    rows.append(f"bench_pipeline,multihost_pack_ratio_vs_legacy,"
+                f"{multihost['pack_ratio_vs_legacy']:.2f}")
     # acceptance: the vectorized pack must at least halve host pack+pad time
     assert pack["speedup_x"] >= 2.0, pack
-    # acceptance: deepening the pipeline never hides MUCH less of the pack
-    # (same 0.15 slack as benchmarks.perf_gate — on a loaded runner the
-    # depth-2 producer's single pack thread falls measurably behind, so a
-    # tighter slack flaps; the check still trips on a structural collapse)
+    # acceptance: deepening the pipeline never hides less of the pack.
+    # Both fractions are best-of-3 (see _engine_comparison), which removes
+    # the runner-load noise that forced the old single-shot slack out to
+    # 0.15 — the gate is back at 0.08 (perf_gate matches).
     assert (engine["depth2"]["overlap_fraction"] >=
-            engine["depth1"]["overlap_fraction"] - 0.15), engine
+            engine["depth1"]["overlap_fraction"] - 0.08), engine
     return rows
 
 

@@ -5,6 +5,7 @@ from repro.control.autoconc import AdaptiveConcurrency, SlotState
 from repro.control.controller import ControllerConfig, ControlPlane, PreRound
 from repro.control.drift import DriftDetector, DriftState, relative_errors
 from repro.control.scenarios import SCENARIOS, run_scenario
+from repro.control.sidecar import SidecarChannel, SidecarRecord, replay_records
 from repro.control.telemetry import FlushResult, MeasuredTelemetry, audit_violations
 
 __all__ = [
@@ -17,8 +18,11 @@ __all__ = [
     "MeasuredTelemetry",
     "PreRound",
     "SCENARIOS",
+    "SidecarChannel",
+    "SidecarRecord",
     "SlotState",
     "audit_violations",
+    "replay_records",
     "relative_errors",
     "run_scenario",
 ]

@@ -124,10 +124,12 @@ from repro.data.batching import (PackBuffers, RoundArrays, build_round_arrays,
                                  padding_stats, plan_round,
                                  split_plan_by_worker, worker_stream_lengths)
 from repro.data.device_cache import CachePlan, DeviceBatchCache
-from repro.distributed.sharding import WorkerShardMap
+from repro.distributed.sharding import HostShardMap, WorkerShardMap
 from repro.fl.round import (StepCompileCache, make_combine_step,
                             make_compressed_combine_step,
-                            make_gather_round_step, make_round_step,
+                            make_gather_round_step,
+                            make_host_node_merge_step,
+                            make_payload_decode_step, make_round_step,
                             make_shard_merge_step, make_worker_round_step)
 from repro.fl.strategy import FedAvg, Strategy
 from repro.obs import NULL_TRACER, critique_round
@@ -158,6 +160,18 @@ def _cat_parts(outs, i):
             lambda *leaves: jnp.concatenate(leaves, axis=0),
             *[o[0] for o in outs])
     return jnp.concatenate([o[i] for o in outs], axis=0)
+
+
+def _partial_to_numpy(part):
+    """Wire form of one host's (theta, n, loss) partial for the
+    process-per-host exchange: plain numpy trees (pickle-safe, and f32 →
+    numpy → f32 is bit-exact, so shipping a partial through the coordinator
+    never perturbs the reduction).  ``None`` (an all-holes block) passes
+    through."""
+    if part is None:
+        return None
+    theta, n, ls = part
+    return (jax.tree.map(np.asarray, theta), np.asarray(n), np.asarray(ls))
 
 
 def _slo_percentiles(rows) -> tuple[float, float]:
@@ -263,6 +277,16 @@ class EngineConfig:
     #                                both delta-encode against the global
     #                                model with error-feedback residuals
     combine_topk_frac: float = 0.05  # fraction of entries topk sends per leaf
+    hosts: int = 0                 # host level above the shard→root combine:
+    #                                0 = legacy two-level tree (byte-identical
+    #                                to pre-host builds); H >= 1 = the K mesh
+    #                                shards partition into H contiguous host
+    #                                blocks, each merging its shards locally
+    #                                and shipping ONE partial to the root —
+    #                                combine_bytes O(K) → O(H).  hosts=1 is
+    #                                the single-host reference every hosts=H
+    #                                run is bit-identical to (canonical
+    #                                pairwise reduction; see HostShardMap).
     # -- control plane (repro.control): any non-default knob enables it ----
     telemetry_mode: str = "synthetic"   # "synthetic" | "measured"
     barrier_policy: str = "reuse"       # "reuse" | "stall" (measured mode)
@@ -329,6 +353,28 @@ class EngineConfig:
         if not 0.0 < self.combine_topk_frac <= 1.0:
             raise ValueError("combine_topk_frac must be in (0, 1], got "
                              f"{self.combine_topk_frac!r}")
+        if not isinstance(self.hosts, int) or self.hosts < 0:
+            raise ValueError(f"hosts must be an int >= 0, got {self.hosts!r}")
+        if self.hosts >= 1:
+            if self.combine_mode != "tree" or self.mesh_workers < 2:
+                raise ValueError(
+                    "hosts >= 1 requires combine_mode='tree' and "
+                    "mesh_workers >= 2: the host level sits above the "
+                    "shard-local merges of the hierarchical combine — the "
+                    "flat combine and the fused single program have no "
+                    "shard partials to group into host blocks")
+            if self.mesh_workers % self.hosts != 0:
+                raise ValueError(
+                    f"hosts ({self.hosts}) must divide mesh_workers "
+                    f"({self.mesh_workers}): host blocks are equal "
+                    "contiguous shard ranges")
+            blk = self.mesh_workers // self.hosts
+            if self.hosts >= 2 and blk & (blk - 1):
+                raise ValueError(
+                    f"shards-per-host ({blk}) must be a power of two for "
+                    "hosts >= 2 — only aligned pow2 blocks are exact "
+                    "subtrees of the canonical pairwise combine, which is "
+                    "what keeps losses bit-identical across host counts")
         if self.adapt_granularity not in ("type", "worker"):
             raise ValueError("adapt_granularity must be 'type' or 'worker', "
                              f"got {self.adapt_granularity!r}")
@@ -578,6 +624,31 @@ class FederatedEngine:
                 self._merge_step = StepCompileCache(
                     lambda: make_shard_merge_step(),
                     capacity=config.compile_cache_size, donate="none")
+        # Host hierarchy (hosts >= 1): shard partials combine through the
+        # canonical pairwise tree — per-host blocks first, then the root
+        # over one partial per host.  The 2-ary node program is shared by
+        # every tree level.  _host_rank / _host_exchange / _round_observer
+        # are the process-per-host harness's seams (launch/multihost.py):
+        # rank r executes only its block's worker programs and all-gathers
+        # host partials through the exchange; the observer ships per-round
+        # control rows onto the sidecar channel.  All three default to the
+        # in-process path (None), which computes every block locally.
+        self._host_map = None
+        self._host_node_step = None
+        self._decode_step = None
+        self._host_rank: int | None = None
+        self._host_exchange = None
+        self._round_observer = None
+        if config.hosts >= 1:
+            self._host_map = HostShardMap.build(self._mesh_shards,
+                                                config.hosts)
+            self._host_node_step = StepCompileCache(
+                lambda: make_host_node_merge_step(),
+                capacity=config.compile_cache_size, donate="none")
+            if config.combine_compress != "none":
+                self._decode_step = StepCompileCache(
+                    lambda: make_payload_decode_step(config.combine_compress),
+                    capacity=config.compile_cache_size, donate="none")
         # Compressed cross-shard combine (combine_compress != "none"): the
         # shard→root payload is a delta-encoded int8/topk tree instead of a
         # dense partial, with per-shard error-feedback residuals owned by
@@ -616,6 +687,8 @@ class FederatedEngine:
                                  ("worker_step", self._worker_step),
                                  ("combine_step", self._combine_step),
                                  ("merge_step", self._merge_step),
+                                 ("host_node_step", self._host_node_step),
+                                 ("decode_step", self._decode_step),
                                  ("encode_step", self._encode_step),
                                  ("compressed_combine_step",
                                   self._compressed_combine_step)):
@@ -633,6 +706,10 @@ class FederatedEngine:
             n += self._worker_step.compiles + self._combine_step.compiles
         if self._merge_step is not None:
             n += self._merge_step.compiles
+        if self._host_node_step is not None:
+            n += self._host_node_step.compiles
+        if self._decode_step is not None:
+            n += self._decode_step.compiles
         if self._compress is not None:
             n += (self._encode_step.compiles
                   + self._compressed_combine_step.compiles)
@@ -656,6 +733,11 @@ class FederatedEngine:
                 for k in ("compiles", "evictions", "hits", "entries"):
                     stats[k] = stats[k] + ms[k]
                 stats["merge_step"] = ms
+            if self._host_node_step is not None:
+                hs = self._host_node_step.stats()
+                for k in ("compiles", "evictions", "hits", "entries"):
+                    stats[k] = stats[k] + hs[k]
+                stats["host_node_step"] = hs
             if self._compress is not None:
                 es = self._encode_step.stats()
                 ccs = self._compressed_combine_step.stats()
@@ -1016,6 +1098,19 @@ class FederatedEngine:
             dev = mesh_map.device_for(w.wid)
             slot = slot_counts.get(shard, 0)
             slot_counts[shard] = slot + 1
+            xs_all = [c.n_batches
+                      for c in assignment.per_worker.get(w.wid, [])]
+            if (self._host_rank is not None
+                    and self._host_map.host_of(shard) != self._host_rank):
+                # Process-per-host harness: another host owns this shard.
+                # The producer stays fully replicated up to here (sampling,
+                # placement, packing — all host-state mutations, so every
+                # rank's RNG streams agree), but the H2D transfer and the
+                # device program are that host's job; keep the positional
+                # entry so dispatch bookkeeping stays aligned.
+                programs.append((w.wid, w.type_name, shard, None, None,
+                                 xs_all, float(loads.get(w.wid, 0.0))))
+                continue
             sl = slice(wi, wi + 1)
             S_w = worker_S[wi]
             mask_d = jax.device_put(arrays.step_mask[sl, :, :S_w], dev)
@@ -1050,6 +1145,10 @@ class FederatedEngine:
         shard_slots: dict[int, int] = {}
         for wid, tname, shard, dev_arrays, cplan, xs, pred in \
                 prep.worker_programs:
+            if dev_arrays is None:
+                # Another host's shard (process-per-host harness): its
+                # owner executes and ships the merged host partial instead.
+                continue
             batches, mask, bnd, wt = dev_arrays
             if self._device_cache is not None and cplan is not None:
                 batches = self._device_cache.apply(batches, cplan)
@@ -1121,6 +1220,8 @@ class FederatedEngine:
             by_group: dict[int, list] = {}
             for d in dispatched:
                 by_group.setdefault(d[2], []).append(d[5])
+            if self._host_map is not None:
+                return self._combine_hosts(prep, by_group)
             if self._compress is not None:
                 return self._combine_compressed(prep, by_group)
             parts = []
@@ -1207,6 +1308,103 @@ class FederatedEngine:
             self.control.on_combine_compressed(
                 prep.t, bytes_sent=prep.combine_bytes,
                 residual_norm=prep.residual_norm)
+        return metrics
+
+    def _combine_hosts(self, prep: _PreparedRound, by_group: dict):
+        """Host-hierarchy combine tail (``EngineConfig.hosts >= 1``): merge
+        each shard's lane partials as usual, then reduce the K positional
+        shard slots through the canonical pairwise tree — host blocks first
+        (each an aligned pow2 subtree; dead shards stay as ``None`` holes),
+        then the root over ONE partial per host.  ``combine_bytes`` accounts
+        the host→root hop: ``live_hosts * partial_bytes`` — O(H), the wire
+        win the host level exists for.
+
+        With ``combine_compress`` on, each shard's partial is still encoded
+        per shard (payloads and error-feedback residuals identical whatever
+        the host count — the H-invariance of the compressed path rests on
+        it) and decoded to a dense reconstruction before the pairwise
+        nodes; compression rides the shard→host hop, the root hop ships
+        dense host partials.
+
+        In the process-per-host harness (``launch/multihost.py``) only the
+        own rank's block is resident: its host partial all-gathers through
+        ``_host_exchange`` and every rank runs the identical root reduction
+        locally — same inputs, same program, bit-identical params on every
+        host."""
+        hm = self._host_map
+        tr = self._tracer
+        nfn, _ = self._host_node_step.lookup(("node",))
+
+        def node(a, b):
+            return nfn(a[0], a[1], a[2], b[0], b[1], b[2])
+
+        staged: dict[int, object] = {}
+        efn = dfn = None
+        if self._compress is not None:
+            efn, _ = self._encode_step.lookup(("encode",))
+            dfn, _ = self._decode_step.lookup(("decode",))
+        slots: list = [None] * hm.n_shards
+        for shard in sorted(by_group):
+            outs = by_group[shard]
+            th = _cat_parts(outs, 0)
+            n_s = _cat_parts(outs, 1)
+            ls_s = _cat_parts(outs, 2)
+            mfn, _ = self._merge_step.lookup(
+                (int(n_s.shape[0]), int(n_s.shape[1])))
+            merged_th, merged_n, merged_ls = mfn(th, n_s, ls_s)
+            theta = jax.tree.map(lambda x: x[0, 0], merged_th)
+            if self._compress is not None:
+                payload, res = efn(self.params, theta,
+                                   self._compress.residual(shard))
+                staged[shard] = res
+                theta = dfn(self.params, payload)
+            slots[shard] = (theta, merged_n[0, 0], merged_ls[0, 0])
+        own = self._host_rank
+        host_parts: list = [None] * hm.n_hosts
+        for h in range(hm.n_hosts):
+            if own is not None and h != own:
+                continue
+            blk = slots[h * hm.block:(h + 1) * hm.block]
+            t0h = time.perf_counter()
+            part = HostShardMap.pairwise_reduce(blk, node)
+            if part is not None and tr.enabled:
+                tr.add_span("exec.host_merge", t0h,
+                            time.perf_counter() - t0h,
+                            lane=f"host{h}", host=h, t=prep.t)
+            host_parts[h] = part
+        if self._host_exchange is not None:
+            gathered = self._host_exchange(
+                prep.t, own, _partial_to_numpy(host_parts[own]))
+            for h, p in enumerate(gathered):
+                if h != own and p is not None:
+                    host_parts[h] = p
+        live = sum(1 for p in host_parts if p is not None)
+        if live == 0:
+            raise RuntimeError(
+                f"round {prep.t}: no live shard partials reached the host "
+                "combine")
+        prep.combine_bytes = live * self._partial_bytes
+        if self._combine_root is not None:
+            # the host→root hop: one merged partial per live host
+            host_parts = [None if p is None
+                          else jax.device_put(p, self._combine_root)
+                          for p in host_parts]
+        root = HostShardMap.pairwise_reduce(host_parts, node)
+        theta_wp = jax.tree.map(lambda x: jnp.asarray(x)[None, None], root[0])
+        n_wp = jnp.asarray(root[1])[None, None]
+        lane_losses = jnp.asarray(root[2])[None, None]
+        step_mask, boundary, weight = prep.combine_masks
+        fn, _ = self._combine_step.lookup((1, 1) + tuple(step_mask.shape))
+        new_params, metrics = fn(self.params, theta_wp, n_wp, lane_losses,
+                                 step_mask, boundary, weight)
+        self.params = new_params
+        if self._compress is not None:
+            self._compress.commit(staged)
+            prep.residual_norm = self._compress.residual_norm()
+            if self.control is not None:
+                self.control.on_combine_compressed(
+                    prep.t, bytes_sent=prep.combine_bytes,
+                    residual_norm=prep.residual_norm)
         return metrics
 
     def _execute(self, prep: _PreparedRound):
@@ -1336,6 +1534,12 @@ class FederatedEngine:
                 "exec_s": prep.exec_s, "stall_s": prep.stall_s,
                 "critique": crit.as_dict()})
 
+        if self._round_observer is not None:
+            # Harness hook (launch/multihost.py): ship this round's
+            # control-plane rows — measured worker times, drift evidence,
+            # slot decisions — onto the sidecar channel, consumer-side in
+            # round order.  Observation only; must not mutate engine state.
+            self._round_observer(prep, result)
         if self.ckpt is not None and (t + 1) % self.cfg.rounds_per_checkpoint == 0:
             self.save_checkpoint()
         return result
@@ -1571,6 +1775,16 @@ class FederatedEngine:
                 dtype=np.uint8).copy()
             extra["control"] = {"nbytes": int(payload.size)}
             aux_tree["control"] = payload
+        if self._host_map is not None:
+            # Host-hierarchy descriptor: the combine-tree family this
+            # checkpoint's trajectory (and any compressed residuals) was
+            # produced under.  hosts=1 ↔ hosts=H sidecars interchange
+            # freely — the canonical pairwise tree makes every H the same
+            # arithmetic — but hosts=0 (the legacy fold) is a different
+            # family, and restore_latest warns + resets residuals when the
+            # families disagree.
+            extra["host_layout"] = {"hosts": self._host_map.n_hosts,
+                                    "shards": self._host_map.n_shards}
         if aux_tree:
             extra["aux_layout"] = "v2"
         self.ckpt.save(self.round_idx, self.params, extra=extra,
@@ -1645,6 +1859,24 @@ class FederatedEngine:
                 print("warning: checkpoint telemetry RNG state unusable "
                       f"({e!r}); resuming with a fresh stream — synthetic "
                       "times will NOT match the uninterrupted run")
+        # Host-layout cross-version guard: hosts=0 (the legacy combine fold)
+        # and hosts>=1 (the canonical pairwise tree) are different combine
+        # arithmetic families; within the hosts>=1 family every H computes
+        # the same tree, so hosts=1 ↔ hosts=H sidecars interchange freely.
+        try:
+            ckpt_hosts = int((extra.get("host_layout") or {}).get("hosts", 0))
+        except (AttributeError, TypeError, ValueError):
+            ckpt_hosts = 0     # malformed sidecar field: treat as legacy
+        cfg_hosts = self._host_map.n_hosts if self._host_map is not None else 0
+        host_family_mismatch = (ckpt_hosts >= 1) != (cfg_hosts >= 1)
+        if host_family_mismatch:
+            print("warning: checkpoint host layout "
+                  f"(hosts={ckpt_hosts}) does not match the configured "
+                  f"engine (hosts={cfg_hosts}); the combine arithmetic "
+                  "families differ, so the resumed trajectory will NOT "
+                  "match the uninterrupted run"
+                  + ("; resuming with zero error-feedback residuals"
+                     if self._compress is not None else ""))
         if self._compress is not None:
             # Drop any residuals from rounds past the restore point, then
             # reload the set the checkpoint captured (if any — a checkpoint
@@ -1653,6 +1885,8 @@ class FederatedEngine:
             # wrong basis entirely).
             self._compress.reset()
             meta = extra.get("combine_compress")
+            if meta and meta.get("shards") and host_family_mismatch:
+                meta = None   # warned above; keep zero residuals
             if meta and meta.get("shards"):
                 if (meta.get("mode") != self.cfg.combine_compress
                         or meta.get("frac") != self.cfg.combine_topk_frac):

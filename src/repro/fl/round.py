@@ -68,6 +68,7 @@ from repro.optim.optimizers import apply_updates
 
 __all__ = ["make_round_step", "make_worker_round_step", "make_combine_step",
            "make_shard_merge_step", "make_compressed_combine_step",
+           "make_host_node_merge_step", "make_payload_decode_step",
            "make_gather_round_step", "RoundMetrics", "StepCompileCache",
            "round_shape_key"]
 
@@ -319,6 +320,64 @@ def make_shard_merge_step():
         return theta, acc.weight[None, None], loss_sum[None, None]
 
     return merge
+
+
+def make_host_node_merge_step():
+    """One node of the canonical pairwise combine tree (the host-hierarchy
+    path, ``EngineConfig.hosts >= 1``; see
+    :class:`~repro.distributed.sharding.HostShardMap`).
+
+    ``node(theta_a, n_a, loss_a, theta_b, n_b, loss_b) -> (theta, n, loss)``
+    merges two partial aggregates (plain params-shaped trees + scalar
+    weights, no ``[1, 1]`` lane dims) via Eq. 1's weighted mean and sums
+    their scan-carried loss totals.  Every node of the tree — the per-host
+    shard merges AND the root's merge over host partials — runs this ONE
+    2-ary program, which is what makes the reduction's bits a function of
+    the tree shape alone: grouping K shards into H aligned pow2 blocks
+    computes the same nodes in the same order whatever H is.
+    """
+
+    def node(theta_a, n_a, loss_a, theta_b, n_b, loss_b):
+        merged = partial_merge(PartialAggregate(theta_a, n_a),
+                               PartialAggregate(theta_b, n_b))
+        return merged.theta, merged.weight, loss_a + loss_b
+
+    return node
+
+
+def make_payload_decode_step(mode: str):
+    """Per-shard payload reconstruction for the host-hierarchy combine
+    (``hosts >= 1`` with ``combine_compress != "none"``).
+
+    ``decode(global_params, payload) -> dense f32 params tree`` rebuilds the
+    shard's partial ``g + dequant(payload)`` — the same arithmetic the
+    legacy compressed-combine fold applies inside its scan — as a dense
+    tree the canonical pairwise nodes can merge.  Encoding stays strictly
+    per-shard (payloads and error-feedback residuals are identical whatever
+    the host count), so compression rides the shard→host hop; the host→root
+    hop ships one DENSE merged partial per host.
+    """
+    if mode not in ("int8", "topk"):
+        raise ValueError(f"no decode step for mode {mode!r}")
+
+    def decode(global_params, payload):
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), global_params)
+        if mode == "int8":
+            q, scales = payload
+            return jax.tree.map(
+                lambda g, qq, s: g + qq.astype(jnp.float32) * s,
+                gf, q, scales)
+        flat_p, tdef = jax.tree_util.tree_flatten(
+            payload, is_leaf=lambda x: isinstance(x, tuple))
+        flat_g = tdef.flatten_up_to(gf)
+        out = []
+        for (idx, vals), g in zip(flat_p, flat_g):
+            delta = (jnp.zeros(g.size, jnp.float32).at[idx].set(vals)
+                     .reshape(g.shape))
+            out.append(g + delta)
+        return tdef.unflatten(out)
+
+    return decode
 
 
 def make_compressed_combine_step(mode: str, *, agg_impl: str = "xla"):

@@ -145,6 +145,7 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                  mesh_workers: int = 0, cache_affinity: bool = False,
                  bucket_mode: str = "round", combine_mode: str = "flat",
                  combine_compress: str = "none", topk_frac: float = 0.05,
+                 hosts: int = 0,
                  grad_clip: float | None = None,
                  obs=None) -> FederatedEngine:
     """Compose a runnable engine for a paper task or an LM arch preset."""
@@ -243,6 +244,7 @@ def build_engine(*, task: str | None = None, arch: str | None = None,
                             combine_mode=combine_mode,
                             combine_compress=combine_compress,
                             combine_topk_frac=topk_frac,
+                            hosts=hosts,
                             **batch_kw),
         checkpoint_store=CheckpointStore(ckpt_dir) if ckpt_dir else None,
         obs=obs,
@@ -357,6 +359,18 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--topk-frac", type=float, default=0.05,
                     help="fraction of coordinates topk compression keeps "
                          "per leaf (static: payload shapes depend on it)")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="host level above the shard->root combine tree: "
+                         "partition the mesh shards into H contiguous host "
+                         "groups, pairwise-merge each group's shard "
+                         "partials locally, and ship ONE partial per host "
+                         "to the root combine (combine_bytes O(shards) -> "
+                         "O(hosts)); losses are bit-identical across H "
+                         "(hosts=1 is the reference tree), 0 = legacy "
+                         "scan-fold combine; needs --combine-mode tree, "
+                         "--mesh-workers >= 2, and shards/H a power of "
+                         "two; see launch/multihost.py for the "
+                         "process-per-host harness")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome/Perfetto trace.json of the run's "
                          "span timeline (producer pack, per-worker sync, "
@@ -444,6 +458,7 @@ def main() -> int:
         combine_mode=args.combine_mode,
         combine_compress=args.combine_compress,
         topk_frac=args.topk_frac,
+        hosts=args.hosts,
         obs=obs)
 
     if obs is not None and obs.flight is not None:
@@ -508,6 +523,8 @@ def main() -> int:
             r.padded_steps for r in results))
         summary["combine_bytes_per_round"] = int(np.mean(
             [r.combine_bytes for r in results])) if results else 0
+        if args.hosts >= 1:
+            summary["hosts"] = args.hosts
         if args.combine_compress != "none":
             summary["combine_compress"] = args.combine_compress
             summary["final_residual_norm"] = (

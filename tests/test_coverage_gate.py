@@ -1,0 +1,100 @@
+"""The CI coverage gate: per-package aggregation, floors, graceful skip.
+
+The gate itself must work in environments WITHOUT the ``coverage``
+package (it only reads the json report), so these tests drive it with
+synthetic report dicts — no coverage dependency anywhere.
+"""
+
+import json
+
+from tools.coverage_gate import (GATED_PACKAGES, compare, main,
+                                 package_coverage, update_baseline)
+
+
+def _report(control_pct=90, obs_pct=88):
+    def entry(covered, total):
+        return {"summary": {"num_statements": total,
+                            "covered_lines": covered}}
+    return {"files": {
+        # absolute and relative paths must normalise to the same package
+        "/ci/build/src/repro/control/telemetry.py":
+            entry(control_pct, 100),
+        "src/repro/control/drift.py": entry(control_pct, 100),
+        "src/repro/obs/tracer.py": entry(obs_pct, 100),
+        "src/repro/population/registry.py": entry(80, 100),
+        "src/repro/compress/combine.py": entry(85, 100),
+        # non-gated packages never enter the aggregation
+        "src/repro/core/engine.py": entry(1, 1000),
+    }}
+
+
+def _fresh(**kw):
+    return package_coverage(_report(**kw))
+
+
+def test_package_aggregation_normalises_paths():
+    agg = _fresh()
+    ctl = agg["src/repro/control"]
+    assert ctl["files"] == 2
+    assert ctl["statements"] == 200 and ctl["covered"] == 180
+    assert ctl["percent"] == 90.0
+    assert agg["src/repro/obs"]["files"] == 1
+    # core is not gated: its 0.1% coverage must not drag anything down
+    assert all(p in agg for p in GATED_PACKAGES)
+
+
+def test_gate_passes_at_and_above_floor():
+    base = update_baseline(_fresh())
+    assert compare(base, _fresh()) == []
+    # within the slack: platform-conditional lines don't flap the gate
+    assert compare(base, _fresh(control_pct=90)) == []
+
+
+def test_gate_catches_coverage_drop():
+    base = update_baseline(_fresh())
+    failures = compare(base, _fresh(control_pct=40))
+    assert len(failures) == 1
+    assert "src/repro/control" in failures[0]
+    assert "fell below" in failures[0]
+
+
+def test_gate_catches_missing_package_and_missing_floor():
+    base = update_baseline(_fresh())
+    rep = _report()
+    rep["files"] = {k: v for k, v in rep["files"].items()
+                    if "population" not in k}
+    failures = compare(base, package_coverage(rep))
+    assert any("src/repro/population" in f and "no files" in f
+               for f in failures)
+    failures = compare({}, _fresh())
+    assert len(failures) == len(GATED_PACKAGES)
+    assert all("--update" in f for f in failures)
+
+
+def test_update_rounds_floors_down():
+    rep = _report()
+    rep["files"]["src/repro/control/drift.py"]["summary"][
+        "covered_lines"] = 99
+    floors = update_baseline(package_coverage(rep))
+    assert floors["src/repro/control"] == 94.0      # 94.5 -> 94
+
+
+def test_main_skips_without_report_but_require_fails(tmp_path, capsys):
+    missing = str(tmp_path / "nope.json")
+    assert main([missing]) == 0
+    assert "skipping" in capsys.readouterr().out
+    assert main([missing, "--require"]) == 1
+
+
+def test_main_gates_and_updates_roundtrip(tmp_path, capsys):
+    rep = tmp_path / "coverage.json"
+    base = tmp_path / "baseline.json"
+    rep.write_text(json.dumps(_report()))
+    assert main([str(rep), "--baseline", str(base), "--update"]) == 0
+    floors = json.loads(base.read_text())
+    assert set(floors) == set(GATED_PACKAGES)
+    assert main([str(rep), "--baseline", str(base)]) == 0
+    # a regressed report against the committed floors fails loudly
+    rep.write_text(json.dumps(_report(control_pct=10)))
+    assert main([str(rep), "--baseline", str(base)]) == 1
+    assert "FAIL" in capsys.readouterr().out

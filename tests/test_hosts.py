@@ -1,0 +1,239 @@
+"""Host-level combine hierarchy (``EngineConfig.hosts``): invariants.
+
+The contract: ``hosts=0`` is the legacy scan-fold tree combine,
+byte-identical to every pre-hosts run; ``hosts>=1`` switches the
+cross-shard reduction to the canonical pairwise tree, where contiguous
+pow2 host blocks are exact subtrees — so losses are BIT-identical in H
+(``hosts=1`` computes the full tree and is the reference).  The host→root
+hop ships one merged partial per live host: ``combine_bytes`` drops from
+O(shards) to O(hosts).  Compression stays per shard (payloads and
+error-feedback residuals H-invariant); the root hop is dense.
+
+Cross-version checkpoint restore (the PR 6 compress-mismatch pattern):
+``hosts=0`` and ``hosts>=1`` are different combine arithmetic families, so
+restoring across the family boundary warns + resets residuals, never
+crashes; within the hosts>=1 family a sidecar written under ``hosts=1``
+restores bit-exactly under ``hosts=2`` and vice versa.
+"""
+
+import jax
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.core import (EngineConfig, FederatedEngine, SyntheticTelemetry,
+                        UniformSampler, make_placement)
+from repro.data import make_federated_dataset
+from repro.distributed import WorkerPool
+from repro.distributed.sharding import HostShardMap
+from repro.models.papertasks import make_task_model
+from repro.optim import sgd
+
+
+def _engine(hosts=0, mesh=4, depth=1, compress="none", workers=4,
+            telemetry="synthetic", drift=0.0, adapt=0, granularity="type",
+            ckpt=None, ckpt_every=2, steps_cap=4, obs=None):
+    ds = make_federated_dataset("sr", n_clients=64, input_dim=16,
+                                batch_size=4, size_mu=2.5, size_sigma=0.8)
+    params, loss = make_task_model("sr", jax.random.key(0), input_dim=16,
+                                   width=32, n_blocks=2)
+    return FederatedEngine(
+        dataset=ds, loss_fn=loss, init_params=params,
+        optimizer=sgd(0.1, momentum=0.9),
+        placement=make_placement("lb"), sampler=UniformSampler(64, 8),
+        pool=WorkerPool.homogeneous(workers, type_name="a40",
+                                    concurrency=2),
+        telemetry=SyntheticTelemetry(), obs=obs,
+        checkpoint_store=(CheckpointStore(ckpt, keep=3)
+                          if ckpt is not None else None),
+        config=EngineConfig(steps_cap=steps_cap, batch_size=4,
+                            lanes_per_worker=2,
+                            pipeline_depth=depth, mesh_workers=mesh,
+                            combine_mode="tree", combine_compress=compress,
+                            hosts=hosts, telemetry_mode=telemetry,
+                            drift_threshold=drift, adapt_interval=adapt,
+                            adapt_granularity=granularity,
+                            rounds_per_checkpoint=ckpt_every))
+
+
+# -- HostShardMap -------------------------------------------------------------
+
+def test_host_shard_map_partitions_contiguously():
+    hm = HostShardMap.build(8, 2)
+    assert hm.block == 4
+    assert list(hm.shards_of(0)) == [0, 1, 2, 3]
+    assert list(hm.shards_of(1)) == [4, 5, 6, 7]
+    assert [hm.host_of(s) for s in range(8)] == [0, 0, 0, 0, 1, 1, 1, 1]
+
+
+def test_host_shard_map_validation():
+    with pytest.raises(ValueError, match="divisible"):
+        HostShardMap.build(4, 3)
+    with pytest.raises(ValueError, match="power of two"):
+        HostShardMap.build(6, 2)          # block 3: not an aligned subtree
+    HostShardMap.build(6, 1)              # hosts=1 allows any block
+    HostShardMap.build(4, 4)              # block 1 (2**0) is fine
+    with pytest.raises(ValueError):
+        HostShardMap.build(4, 0)
+
+
+def test_pairwise_reduce_blocks_are_subtrees():
+    """The load-bearing algebra: reducing each aligned pow2 block first,
+    then the block results, gives the SAME pairing as one flat pairwise
+    pass — the reason hosts=H is bit-identical to hosts=1."""
+    merge = lambda a, b: ("+", a, b)      # record the tree shape exactly
+    slots = list("abcdefgh")
+    flat = HostShardMap.pairwise_reduce(list(slots), merge)
+    blocks = [HostShardMap.pairwise_reduce(slots[i:i + 4], merge)
+              for i in (0, 4)]
+    assert HostShardMap.pairwise_reduce(blocks, merge) == flat
+
+
+def test_pairwise_reduce_holes_and_odd_tail():
+    merge = lambda a, b: ("+", a, b)
+    # holes keep their POSITION: a dead shard must not re-pair survivors
+    assert (HostShardMap.pairwise_reduce(["a", None, "c", "d"], merge)
+            == ("+", "a", ("+", "c", "d")))
+    # odd trailing slot carries up a level
+    assert (HostShardMap.pairwise_reduce(["a", "b", "c"], merge)
+            == ("+", ("+", "a", "b"), "c"))
+    assert HostShardMap.pairwise_reduce([None, None], merge) is None
+    assert HostShardMap.pairwise_reduce([], merge) is None
+    assert HostShardMap.pairwise_reduce(["x"], merge) == "x"
+
+
+# -- config validation --------------------------------------------------------
+
+def test_engine_config_rejects_bad_host_knobs():
+    with pytest.raises(ValueError, match="combine_mode='tree'"):
+        EngineConfig(mesh_workers=2, combine_mode="flat", hosts=1)
+    with pytest.raises(ValueError, match="combine_mode='tree'"):
+        EngineConfig(mesh_workers=0, hosts=1)
+    with pytest.raises(ValueError, match="divide"):
+        EngineConfig(mesh_workers=4, combine_mode="tree", hosts=3)
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(mesh_workers=12, combine_mode="tree", hosts=2)
+    with pytest.raises(ValueError, match="hosts"):
+        EngineConfig(mesh_workers=4, combine_mode="tree", hosts=-1)
+    EngineConfig(mesh_workers=4, combine_mode="tree", hosts=2)   # block 2
+    EngineConfig(mesh_workers=12, combine_mode="tree", hosts=1)  # reference
+
+
+# -- the acceptance matrix ----------------------------------------------------
+
+def test_hosts_bit_identity_matrix():
+    """The PR acceptance gate: hosts=2 losses bit-identical to hosts=1
+    across depths {0,1,2} x compress {none,int8}, controller live (drift
+    detection + per-worker slot climbing)."""
+    kw = dict(drift=0.4, adapt=2, granularity="worker")
+    for compress in ("none", "int8"):
+        base = _engine(hosts=1, depth=1, compress=compress, **kw).run(5)
+        for depth in (0, 1, 2):
+            for hosts in (1, 2):
+                res = _engine(hosts=hosts, depth=depth, compress=compress,
+                              **kw).run(5)
+                tag = f"hosts={hosts} depth={depth} compress={compress}"
+                assert ([r.loss for r in res]
+                        == [r.loss for r in base]), tag
+                assert ([r.makespan for r in res]
+                        == [r.makespan for r in base]), tag
+
+
+def test_hosts_four_way_split_matches_reference():
+    """H == K (block 1): every shard is its own host; still the same tree."""
+    base = _engine(hosts=1).run(4)
+    res = _engine(hosts=4).run(4)
+    assert [r.loss for r in res] == [r.loss for r in base]
+
+
+def test_hosts_combine_bytes_scale_with_hosts_not_shards():
+    """The wire win the level exists for: the accounted host→root hop is
+    live_hosts * partial_bytes — halving when 4 shards fold into 2 hosts,
+    and invariant to compression (the root hop ships dense partials;
+    compression rides the shard→host hop)."""
+    by_hosts = {}
+    for hosts in (1, 2, 4):
+        eng = _engine(hosts=hosts)
+        res = eng.run(3)
+        assert all(r.combine_bytes
+                   == hosts * eng._partial_bytes for r in res)
+        by_hosts[hosts] = res[-1].combine_bytes
+    assert by_hosts[4] == 2 * by_hosts[2] == 4 * by_hosts[1]
+    eng = _engine(hosts=2, compress="int8")
+    assert all(r.combine_bytes == 2 * eng._partial_bytes
+               for r in eng.run(3))
+
+
+def test_hosts_measured_mode_keeps_audit_clean():
+    eng = _engine(hosts=2, telemetry="measured", drift=0.4)
+    eng.run(5)
+    st = eng.control.stats()
+    assert st["audit_violations"] == 0
+    assert st["barrier"]["rows_attributed"] == 0
+    assert st["barrier"]["rows_exact"] > 0
+
+
+def test_host_merge_spans_and_compile_accounting():
+    from repro.obs import make_observability
+    obs = make_observability(trace_rounds=16)
+    eng = _engine(hosts=2, obs=obs)
+    eng.run(3)
+    lanes = {r[4] for r in obs.tracer.snapshot()
+             if r[1] == "exec.host_merge"}
+    assert lanes == {"host0", "host1"}
+    assert eng.compile_stats["host_node_step"]["compiles"] >= 1
+
+
+# -- cross-version checkpoint restore (satellite: aux sidecar) ---------------
+
+def test_restore_same_family_is_bit_exact_across_host_counts():
+    """Within the hosts>=1 family every H computes the same pairwise tree,
+    so a checkpoint written under hosts=1 resumes bit-exactly under
+    hosts=2 (and vice versa) — including compressed residuals, which are
+    per-shard and therefore H-independent."""
+    for compress in ("none", "int8"):
+        for src, dst in ((1, 2), (2, 1)):
+            base = _engine(hosts=dst, compress=compress).run(6)
+            tmp = _mkdtemp()
+            _engine(hosts=src, compress=compress, ckpt=tmp).run(4)
+            e = _engine(hosts=dst, compress=compress, ckpt=tmp)
+            assert e.restore_latest()
+            assert e.round_idx == 4
+            res = e.run(2)
+            tag = f"{src}->{dst} compress={compress}"
+            assert ([r.loss for r in res]
+                    == [r.loss for r in base[4:]]), tag
+
+
+@pytest.mark.parametrize("src,dst", [(0, 2), (2, 0), (0, 1), (1, 0)])
+def test_restore_across_family_warns_never_crashes(src, dst, tmp_path,
+                                                   capsys):
+    """hosts=0 (legacy scan fold) and hosts>=1 (pairwise tree) are
+    different combine arithmetic: restoring across the boundary must warn
+    + reset residuals (PR 6's mode-mismatch pattern), never crash."""
+    _engine(hosts=src, compress="int8", ckpt=str(tmp_path)).run(4)
+    e = _engine(hosts=dst, compress="int8", ckpt=str(tmp_path))
+    assert e.restore_latest()
+    assert e.round_idx == 4
+    out = capsys.readouterr().out
+    assert "host layout" in out
+    assert "zero error-feedback residuals" in out
+    e.run(1)    # still functional after the reset
+    assert e._compress is not None
+
+
+def test_restore_with_malformed_host_layout_never_crashes(tmp_path):
+    import json
+    import pathlib
+    _engine(hosts=1, ckpt=str(tmp_path)).run(2)
+    meta = sorted(pathlib.Path(tmp_path).glob("*.json"))[-1]
+    blob = json.loads(meta.read_text())
+    blob.setdefault("extra", {})["host_layout"] = "not-a-dict"
+    meta.write_text(json.dumps(blob))
+    e = _engine(hosts=1, ckpt=str(tmp_path))
+    assert e.restore_latest()   # malformed sidecar field: tolerated
+    e.run(1)
+
+
+def _mkdtemp():
+    import tempfile
+    return tempfile.mkdtemp(prefix="pollen-hosts-")

@@ -1,0 +1,116 @@
+"""Process-per-host harness (launch/multihost.py): distribution + faults.
+
+Two invariants ride the harness: (1) the spawned fleet is *arithmetically
+invisible* — per-round losses bit-match the in-process ``hosts=1``
+reference, every rank agrees, and the round-order sidecar replay keeps
+the refit-barrier audit clean; (2) a host death is a *clean abort* — the
+coordinator dumps a flight record (never raises), and a resume from the
+last rank-0 checkpoint is bit-exact with the uninterrupted run.
+
+Each run spawns real OS processes (spawn context — jax is not fork-safe),
+so the suite keeps the fleet small and the rounds short.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.control.sidecar import SidecarRecord, replay_records
+from repro.control.telemetry import audit_violations
+from repro.launch.multihost import run_multihost
+from repro.launch.train import build_engine
+from repro.obs import make_observability
+
+
+def _kwargs(**over):
+    kw = dict(task="sr", workers=4, mesh_workers=4, pipeline_depth=1,
+              combine_mode="tree", combine_compress="none",
+              steps_cap=4, seed=13, hosts=2)
+    kw.update(over)
+    return kw
+
+
+def _reference(rounds, **over):
+    eng = build_engine(**_kwargs(hosts=1, **over))
+    return [r.loss for r in eng.run(rounds)]
+
+
+# -- sidecar replay (pure, no processes) -------------------------------------
+
+def test_sidecar_replay_keeps_audit_clean():
+    recs = [SidecarRecord.from_round(
+                round_idx=t, host=h, exec_s=0.1, n_steps=4,
+                worker_times=[(h * 2 + w, "a40", (2.0, 1.0), 0.1, 0.11)
+                              for w in range(2)])
+            for t in range(5) for h in range(2)]
+    for policy in ("reuse", "stall"):
+        mt = replay_records(recs, policy=policy)
+        assert audit_violations(mt) == []
+        assert mt.rows_recorded == 5 * 2 * 2 * 2
+        assert mt.stalls == 0       # round order: the barrier never waits
+
+
+def test_sidecar_replay_rejects_foreign_payload():
+    from repro.control.sidecar import SidecarChannel
+    import pickle
+    with pytest.raises(TypeError, match="SidecarRecord"):
+        SidecarChannel.decode(pickle.dumps(["not-a-record"]))
+
+
+# -- the distributed run -----------------------------------------------------
+
+def test_multihost_bit_identical_to_in_process():
+    res = run_multihost(build_engine, _kwargs(), hosts=2, rounds=4)
+    assert res.ok, res.reason
+    assert res.losses == _reference(4)
+    assert len(res.per_rank_losses) == 2
+    assert res.audit == []
+    # one sidecar record per (round, rank)
+    assert len(res.records) == 4 * 2
+    hosts_seen = {(r.round_idx, r.host) for r in res.records}
+    assert hosts_seen == {(t, h) for t in range(4) for h in range(2)}
+    # each rank executed only its own block's workers
+    for r in res.records:
+        wids = {w[0] for w in r.worker_times}
+        assert wids == ({0, 1} if r.host == 0 else {2, 3}), r
+
+
+def test_multihost_rejects_mismatched_hosts():
+    with pytest.raises(ValueError, match="must match"):
+        run_multihost(build_engine, _kwargs(hosts=1), hosts=2, rounds=1)
+
+
+# -- fault injection ---------------------------------------------------------
+
+def test_multihost_host_death_aborts_cleanly_and_resumes_bit_exact(tmp_path):
+    """Kill rank 1 mid-round (hard os._exit inside the combine exchange of
+    round 3): the coordinator must return ok=False — never raise — dump a
+    flight record, and a fleet resumed from the last rank-0 checkpoint
+    (round 2) must finish bit-exactly with the uninterrupted reference."""
+    ck = str(tmp_path / "ck")
+    fpath = str(tmp_path / "flight.json")
+    kw = _kwargs(ckpt_dir=ck, rounds_per_checkpoint=2)
+    ref = _reference(6, rounds_per_checkpoint=2)
+
+    obs = make_observability(trace_rounds=8, flight_rounds=8,
+                             flight_path=fpath)
+    res = run_multihost(build_engine, kw, hosts=2, rounds=6,
+                        kill_at=(3, 1), flight=obs.flight)
+    assert not res.ok
+    assert "host 1 died" in res.reason
+    assert res.rounds_completed == 3        # rounds 0-2 fully combined
+    # the flight record dumped, is valid json, and holds the last rounds
+    assert res.flight_path == fpath and os.path.exists(fpath)
+    blob = json.loads(open(fpath).read())
+    assert "host 1 died" in blob["reason"]
+    assert blob["rounds"], blob.keys()
+    # partial sidecar evidence still replays clean (rounds 0..2)
+    assert res.audit == []
+    assert {r.round_idx for r in res.records} == {0, 1, 2}
+
+    # surviving-state resume: rank 0 checkpointed after round 2
+    res2 = run_multihost(build_engine, kw, hosts=2, rounds=4, resume=True)
+    assert res2.ok, res2.reason
+    assert res2.losses == ref[2:6]
+    assert res2.audit == []

@@ -54,6 +54,17 @@ def _record():
             "slo_p99": 11.5,
             "wall_s_per_round": 0.2,
         },
+        "multihost": {
+            "losses_identical": True,
+            "hosts0": {"combine_bytes": 660000, "pack_s_per_round": 0.012},
+            "hosts1": {"combine_bytes": 165000, "pack_s_per_round": 0.012},
+            "hosts2": {"combine_bytes": 330000, "pack_s_per_round": 0.013},
+            "hosts4": {"combine_bytes": 660000, "pack_s_per_round": 0.012},
+            "root_bytes_ratio_h2_h1": 2.0,
+            "root_bytes_ratio_h4_h1": 4.0,
+            "root_bytes_ratio_legacy_h1": 4.0,
+            "pack_ratio_vs_legacy": 1.08,
+        },
     }
 
 
@@ -135,6 +146,13 @@ def test_each_regression_class_is_caught():
          lambda r: r["population"].__setitem__("slo_p99", 1.0)),
         ("population round time blowup",
          lambda r: r["population"].__setitem__("wall_s_per_round", 2.0)),
+        ("host counts diverged losses",
+         lambda r: r["multihost"].__setitem__("losses_identical", False)),
+        ("root combine stopped shipping one partial per host",
+         lambda r: r["multihost"].__setitem__("root_bytes_ratio_h2_h1",
+                                              2.5)),
+        ("host level leaked into the producer",
+         lambda r: r["multihost"].__setitem__("pack_ratio_vs_legacy", 2.0)),
     ]
     for name, mutate in cases:
         fresh = copy.deepcopy(_record())

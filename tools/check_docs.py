@@ -53,6 +53,11 @@ ARCHITECTURE_NEEDLES = (
     # the observability plane (tracer bit-identity, idle-gap accounting,
     # flight dumps) and controller checkpoint persistence
     "Tracer", "idle_fraction", "flight recorder", "state_dict",
+    # the host hierarchy (shard→host partition, canonical pairwise tree,
+    # process-per-host harness, sidecar telemetry replay)
+    "Host hierarchy", "HostShardMap", "pairwise_reduce",
+    "launch.multihost", "SidecarChannel", "host_layout",
+    "exec.host_merge", "O(hosts)",
 )
 
 # What docs/OBSERVABILITY.md must keep covering: the tracer's ring
@@ -67,7 +72,7 @@ OBSERVABILITY_NEEDLES = (
     "critical_path", "write_trace", "ui.perfetto.dev", "--trace-out",
     "--flight-rounds", "SIGTERM", "never to raise",
     "tracer_overhead_fraction", "trend_summary.json",
-    "state_dict", ".aux.npz",
+    "state_dict", ".aux.npz", "exec.host_merge",
 )
 
 # What docs/POPULATION.md must keep covering: the registry's hash streams,

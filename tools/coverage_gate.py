@@ -1,0 +1,155 @@
+"""CI coverage gate: line coverage of the gated subsystems must not drop.
+
+The tier-1 suite runs under ``coverage run`` in CI; this tool reads the
+``coverage json`` report and fails the build when any gated package's
+line coverage falls below the committed baseline
+(``tools/coverage_baseline.json``) by more than the slack.  The gate is
+*ratcheted by hand*: the baseline holds conservative floors, and a PR
+that meaningfully raises coverage should also raise them (``--update``
+rewrites the baseline from a fresh report, rounded DOWN to whole
+percents so run-to-run jitter never trips the gate).
+
+Gated packages — the subsystems whose behavior is mostly reachable only
+through engine integration, where a silent test deletion or an
+accidentally-skipped suite would otherwise go unnoticed::
+
+    src/repro/control  src/repro/obs  src/repro/population  src/repro/compress
+
+Graceful degradation: environments without the ``coverage`` package (the
+benchmark container, local dev boxes) can't produce a report — when the
+report file is absent the gate prints a skip notice and exits 0, so the
+same make target works everywhere.  CI always installs ``coverage`` and
+passes ``--require``, which turns a missing report into a failure.
+
+Usage::
+
+    coverage run --source=src/repro -m pytest -x -q
+    coverage json -o coverage.json
+    python tools/coverage_gate.py coverage.json            # gate
+    python tools/coverage_gate.py coverage.json --update   # ratchet
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GATED_PACKAGES = (
+    "src/repro/control",
+    "src/repro/obs",
+    "src/repro/population",
+    "src/repro/compress",
+)
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "coverage_baseline.json")
+
+# Absolute percentage points a package may dip below its floor before the
+# gate trips: absorbs platform-conditional lines (e.g. fallback branches)
+# without letting a deleted test module (tens of points) through.
+SLACK_PCT = 1.0
+
+
+def package_coverage(report: dict) -> dict[str, dict]:
+    """Aggregate a ``coverage json`` report to per-gated-package totals.
+
+    Returns ``{package: {"percent": float, "statements": int,
+    "covered": int, "files": int}}``.  File paths are normalised so the
+    report may use absolute or repo-relative paths.
+    """
+    out = {p: {"statements": 0, "covered": 0, "files": 0}
+           for p in GATED_PACKAGES}
+    for path, entry in (report.get("files") or {}).items():
+        norm = path.replace(os.sep, "/")
+        # tolerate absolute paths and reports generated from src/ cwd
+        idx = norm.find("src/repro/")
+        key = norm[idx:] if idx >= 0 else "src/repro/" + norm.lstrip("./")
+        for pkg in GATED_PACKAGES:
+            if key.startswith(pkg + "/") or key == pkg + ".py":
+                s = entry.get("summary", {})
+                out[pkg]["statements"] += int(s.get("num_statements", 0))
+                out[pkg]["covered"] += int(s.get("covered_lines", 0))
+                out[pkg]["files"] += 1
+                break
+    for pkg, agg in out.items():
+        agg["percent"] = (100.0 * agg["covered"] / agg["statements"]
+                          if agg["statements"] else 0.0)
+    return out
+
+
+def compare(baseline: dict, fresh: dict, *, slack: float = SLACK_PCT
+            ) -> list[str]:
+    """Return one message per violation (empty == the gate passes)."""
+    failures = []
+    for pkg in GATED_PACKAGES:
+        floor = baseline.get(pkg)
+        if floor is None:
+            failures.append(f"baseline has no floor for {pkg} — run "
+                            f"--update to (re)generate it")
+            continue
+        got = fresh.get(pkg, {})
+        if not got.get("files"):
+            failures.append(f"{pkg}: no files in the coverage report — "
+                            f"was the suite run with --source=src/repro?")
+            continue
+        pct = got["percent"]
+        if pct < float(floor) - slack:
+            failures.append(
+                f"{pkg}: line coverage {pct:.1f}% fell below the committed "
+                f"floor {floor:.1f}% (slack {slack}pt) — tests were lost "
+                f"or the new code is untested")
+    return failures
+
+
+def update_baseline(fresh: dict) -> dict:
+    """Floors from a fresh report, rounded DOWN to whole percents."""
+    return {pkg: float(int(fresh[pkg]["percent"])) for pkg in GATED_PACKAGES}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="coverage json report path")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline floors from this report")
+    ap.add_argument("--require", action="store_true",
+                    help="fail (instead of skip) when the report is missing")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.report):
+        if args.require:
+            print(f"coverage gate: report {args.report!r} is missing")
+            return 1
+        print(f"coverage gate: no report at {args.report!r} (coverage not "
+              f"installed?) — skipping")
+        return 0
+
+    with open(args.report) as f:
+        fresh = package_coverage(json.load(f))
+
+    if args.update:
+        floors = update_baseline(fresh)
+        with open(args.baseline, "w") as f:
+            json.dump(floors, f, indent=1, sort_keys=True)
+            f.write("\n")
+        for pkg, floor in sorted(floors.items()):
+            print(f"coverage gate: floor {pkg} = {floor:.0f}%")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(baseline, fresh)
+    for pkg in GATED_PACKAGES:
+        agg = fresh[pkg]
+        print(f"coverage gate: {pkg}: {agg['percent']:.1f}% "
+              f"({agg['covered']}/{agg['statements']} lines, "
+              f"{agg['files']} files; floor {baseline.get(pkg, '—')})")
+    for msg in failures:
+        print("FAIL:", msg)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
